@@ -1,0 +1,49 @@
+"""Beyond-paper: the FleetOpt planner applied to every assigned
+architecture's KV geometry (DESIGN.md §4).
+
+For each arch we derive the analytical profile from its KV (or
+recurrent-state) bytes/token, compute the cost-cliff ratio at the Azure
+boundary, and run the full planner on the Azure workload. SSM/hybrid
+archs exhibit the paper's rho -> 1 limit: slots are cheap, the cliff is
+flat, and C&R's incremental value collapses — exactly what
+Delta_alpha*(1 - 1/rho) predicts."""
+from benchmarks.common import emit
+from repro.configs.base import get_config, list_configs
+from repro.core.cost import cliff_ratio, cr_incremental_savings
+from repro.core.planner import fleetopt_plan, plan_homogeneous
+from repro.core.profiles import profile_for_arch
+from repro.core.workload import get_workload
+
+
+def run():
+    w = get_workload("azure")
+    rows = []
+    for name in list_configs():
+        cfg = get_config(name)
+        prof = profile_for_arch(cfg)
+        rho = cliff_ratio(prof, w.b_short)
+        try:
+            homo = plan_homogeneous(w, 1000.0, 0.5, prof).total_gpus
+            fo, _ = fleetopt_plan(w, 1000.0, 0.5, prof, fixed_b=w.b_short)
+            saving = 1 - fo.total_gpus / homo
+            gamma = fo.gamma
+        except Exception as e:
+            homo, saving, gamma = -1, float("nan"), "-"
+        rows.append({
+            "arch": name,
+            "kv_kb_per_token": round(cfg.kv_bytes_per_token() / 1024, 1),
+            "slots_at_4k": prof.n_max(4096),
+            "slots_at_64k": prof.n_max(65536),
+            "cliff_rho": round(rho, 1),
+            "cr_incremental_pct": round(
+                100 * cr_incremental_savings(w.beta(), w.p_c, rho), 2),
+            "homo_gpus": homo,
+            "fleetopt_saving_pct": round(100 * saving, 1),
+            "gamma_star": gamma,
+        })
+    emit("arch_cliff", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

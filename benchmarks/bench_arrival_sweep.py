@@ -1,0 +1,35 @@
+"""Paper Table 6: fleet size and savings vs arrival rate
+(agent-heavy): proportional savings must be stable across a 20x range."""
+from benchmarks.common import emit
+from repro.core.planner import fleetopt_plan, plan_homogeneous, plan_two_pool
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload
+
+PAPER = {100: (240, 227, 225), 200: (480, 454, 448), 500: (1199, 1134, 1119),
+         1000: (2397, 2266, 2236), 2000: (4794, 4531, 4470)}
+
+
+def run():
+    w = get_workload("agent-heavy")
+    rows = []
+    for lam in (100.0, 200.0, 500.0, 1000.0, 2000.0):
+        homo = plan_homogeneous(w, lam, 0.5, A100_LLAMA70B)
+        pr = plan_two_pool(w, lam, 0.5, A100_LLAMA70B, w.b_short, 1.0)
+        fo, _ = fleetopt_plan(w, lam, 0.5, A100_LLAMA70B, fixed_b=w.b_short)
+        ph, pp, pf = PAPER[int(lam)]
+        rows.append({
+            "lam_req_s": int(lam), "homo": homo.total_gpus,
+            "pr": pr.total_gpus, "fleetopt": fo.total_gpus,
+            "gamma_star": fo.gamma,
+            "pr_saving_pct": round(100 * (1 - pr.total_gpus
+                                          / homo.total_gpus), 1),
+            "fo_saving_pct": round(100 * (1 - fo.total_gpus
+                                          / homo.total_gpus), 1),
+            "paper_homo": ph, "paper_pr": pp, "paper_fo": pf,
+        })
+    emit("table6_arrival_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

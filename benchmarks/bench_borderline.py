@@ -1,0 +1,32 @@
+"""Paper Table 2: borderline fraction beta at the evaluation thresholds."""
+from benchmarks.common import emit
+from repro.core.cost import cliff_ratio
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload, list_workloads
+
+PAPER = {"azure": (0.898, 0.078, 16), "lmsys": (0.909, 0.046, 42),
+         "agent-heavy": (0.740, 0.112, 8)}
+
+
+def run():
+    rows = []
+    for name in list_workloads():
+        w = get_workload(name)
+        pa, pb, pc = PAPER[name]
+        above = 1.0 - w.alpha()
+        rows.append({
+            "workload": name, "b_short": w.b_short, "gamma": w.gamma_eval,
+            "alpha": round(w.alpha(), 3), "paper_alpha": pa,
+            "beta": round(w.beta(), 3), "paper_beta": pb,
+            "cliff": round(cliff_ratio(A100_LLAMA70B, w.b_short), 1),
+            "paper_cliff": pc,
+            "borderline_share_of_above_pct":
+                round(100 * w.beta() / above, 1),
+            "archetype": w.archetype,
+        })
+    emit("table2_borderline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

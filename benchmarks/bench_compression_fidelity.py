@@ -1,0 +1,48 @@
+"""Paper Table 7 / App. C: compression fidelity on borderline prompts.
+
+BERTScore needs RoBERTa-large (unavailable offline — DESIGN.md §6); we
+report p_c, ROUGE-L recall, TF-IDF cosine and token reduction on
+synthetic borderline prompts at the agent-heavy configuration."""
+import numpy as np
+
+from benchmarks.bench_compression_latency import synth_prompt
+from benchmarks.common import emit
+from repro.core.compression import (ExtractiveCompressor, count_tokens,
+                                    rouge_l_recall, tfidf_cosine)
+
+PAPER = {"p_c": 1.00, "rouge_l": 0.856, "tfidf_cos": 0.981,
+         "reduction_pct": 15.4}
+
+
+def run(n: int = 60):
+    rng = np.random.default_rng(7)
+    comp = ExtractiveCompressor()
+    b_short, lout = 8192, 512
+    ok, rouges, coss, reds = 0, [], [], []
+    for _ in range(n):
+        lt = int(rng.uniform(1.02, 1.48) * b_short)     # band 8K-12K
+        text = synth_prompt(rng, lt)
+        res = comp.compress(text, b_short - lout)
+        if res.success:
+            ok += 1
+            rouges.append(rouge_l_recall(text, res.text))
+            coss.append(tfidf_cosine(text, res.text))
+            reds.append(res.token_reduction)
+    rows = [{
+        "metric": m, "mean": round(float(np.mean(v)), 3),
+        "p10": round(float(np.percentile(v, 10)), 3),
+        "p50": round(float(np.percentile(v, 50)), 3),
+        "p90": round(float(np.percentile(v, 90)), 3),
+        "paper_mean": p,
+    } for m, v, p in (("rouge_l_recall", rouges, PAPER["rouge_l"]),
+                      ("tfidf_cosine", coss, PAPER["tfidf_cos"]),
+                      ("token_reduction", reds,
+                       PAPER["reduction_pct"] / 100))]
+    rows.insert(0, {"metric": "p_c", "mean": round(ok / n, 3), "p10": "-",
+                    "p50": "-", "p90": "-", "paper_mean": PAPER["p_c"]})
+    emit("table7_compression_fidelity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

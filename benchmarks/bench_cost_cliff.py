@@ -1,0 +1,22 @@
+"""Paper Table 1: the cost cliff around B_short = 8,192."""
+from benchmarks.common import emit
+from repro.core.cost import cliff_table
+from repro.core.profiles import A100_LLAMA70B
+
+
+def run():
+    rows = []
+    for r in cliff_table(A100_LLAMA70B, b_short=8192):
+        rows.append({
+            "l_total": r.l_total, "pool": r.pool,
+            "slots_per_gpu": r.slots_per_gpu,
+            "kv_utilised_pct": round(100 * r.kv_utilised_frac, 1),
+            "cost_ratio": r.cost_ratio,
+            "paper_cost_ratio": 1.0 if r.pool == "short" else 8.0,
+        })
+    emit("table1_cost_cliff", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Table 3: fleet GPU counts and annualized cost for every method
+(homogeneous / PR / PR+C&R retrofit / FleetOpt co-design)."""
+from benchmarks.common import emit
+from repro.core.planner import fleetopt_plan, plan_homogeneous, plan_two_pool
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload, list_workloads
+
+LAM, SLO = 1000.0, 0.5
+
+PAPER = {   # workload -> {method: (n_s, n_l, total, savings_pct)}
+    "azure": {"homogeneous": (0, 0, 284, 0.0),
+              "pool_routing": (43, 131, 174, 38.7),
+              "pr_cr_retrofit": (47, 45, 92, 67.6),
+              "fleetopt": (48, 2, 50, 82.4)},
+    "lmsys": {"homogeneous": (0, 0, 139, 0.0),
+              "pool_routing": (7, 74, 81, 41.7),
+              "pr_cr_retrofit": (7, 65, 72, 48.2),
+              "fleetopt": (7, 52, 59, 57.6)},
+    "agent-heavy": {"homogeneous": (0, 0, 2397, 0.0),
+                    "pool_routing": (229, 2037, 2266, 5.5),
+                    "pr_cr_retrofit": (255, 1981, 2236, 6.7),
+                    "fleetopt": (255, 1981, 2236, 6.7)},
+}
+
+
+def plans_for(name: str):
+    w = get_workload(name)
+    homo = plan_homogeneous(w, LAM, SLO, A100_LLAMA70B)
+    pr = plan_two_pool(w, LAM, SLO, A100_LLAMA70B, w.b_short, 1.0)
+    retro = plan_two_pool(w, LAM, SLO, A100_LLAMA70B, w.b_short, 1.5)
+    fo, _ = fleetopt_plan(w, LAM, SLO, A100_LLAMA70B, fixed_b=w.b_short)
+    return w, {"homogeneous": homo, "pool_routing": pr,
+               "pr_cr_retrofit": retro, "fleetopt": fo}
+
+
+def run():
+    rows = []
+    for name in list_workloads():
+        w, plans = plans_for(name)
+        homo_total = plans["homogeneous"].total_gpus
+        for method, plan in plans.items():
+            ps, pl_, ptot, psav = PAPER[name][method]
+            rows.append({
+                "workload": name, "method": method,
+                "gamma": plan.gamma if method != "homogeneous" else "-",
+                "n_s": plan.short.n_gpus if plan.short else 0,
+                "n_l": plan.long.n_gpus if plan.long else 0,
+                "total": plan.total_gpus,
+                "annual_cost_k$": round(plan.annual_cost / 1e3),
+                "savings_pct": round(
+                    100 * (1 - plan.total_gpus / homo_total), 1),
+                "paper_total": ptot, "paper_savings_pct": psav,
+            })
+    emit("table3_fleet_savings", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

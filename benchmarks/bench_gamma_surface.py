@@ -1,0 +1,25 @@
+"""The full Algorithm-1 cost surface cost[B, gamma] for each workload —
+the data behind the planner's argmin (useful for operators to see how
+flat the optimum is and what a mis-set gamma costs)."""
+from benchmarks.common import emit
+from repro.core.planner import fleetopt_plan
+from repro.core.workload import get_workload, list_workloads
+
+
+def run():
+    rows = []
+    for name in list_workloads():
+        w = get_workload(name)
+        best, grid = fleetopt_plan(w)
+        for (b, g), cost in sorted(grid.items()):
+            rows.append({"workload": name, "b_short": b, "gamma": g,
+                         "annual_cost_k$": round(cost / 1e3, 1),
+                         "is_optimum": (b, g) == (best.b_short, best.gamma),
+                         "regret_pct": round(
+                             100 * (cost / best.annual_cost - 1), 2)})
+    emit("alg1_cost_surface", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

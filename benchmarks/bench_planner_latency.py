@@ -1,0 +1,46 @@
+"""Paper §6: the (B, gamma) sweep completes in < 1 ms once the
+per-pool service moments are calibrated. We report both the sweep-only
+time (paper's figure) and the end-to-end time including Monte-Carlo
+calibration."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import planner as PL
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.queueing import kimura_w99
+from repro.core.workload import get_workload, list_workloads
+
+
+def run():
+    rows = []
+    for name in list_workloads():
+        w = get_workload(name)
+        # end-to-end (incl. 30k-sample Monte-Carlo moment calibration)
+        PL.fleetopt_plan(w, fixed_b=w.b_short)      # warm caches/JIT-free
+        t0 = time.perf_counter()
+        PL.fleetopt_plan(w, fixed_b=w.b_short)
+        e2e_ms = (time.perf_counter() - t0) * 1e3
+        # sweep-only: Erlang-C inversions at pre-computed moments
+        plan = PL.plan_two_pool(w, 1000.0, 0.5, A100_LLAMA70B, w.b_short,
+                                1.5)
+        mus = (plan.short.moments, plan.long.moments)
+        t0 = time.perf_counter()
+        reps = 200
+        for _ in range(reps):
+            for m, lamp, nmax in ((mus[0], plan.short.lam, plan.short.n_max),
+                                  (mus[1], plan.long.lam, plan.long.n_max)):
+                n = int(np.ceil(lamp / (0.85 * nmax * m.mu)))
+                kimura_w99(n * nmax, m.mu, lamp, m.cs2)
+        sweep_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"workload": name,
+                     "sweep_only_us_per_Bgamma_point": round(sweep_us, 1),
+                     "end_to_end_ms": round(e2e_ms, 1),
+                     "paper_claim": "<1 ms sweep"})
+    emit("planner_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Beyond-paper: prefix caching as a provisioning lever.
+
+The paper's LMSYS workload is multi-turn with ACCUMULATED context —
+every turn resubmits the whole history. A gateway/engine prefix cache
+with hit rate h removes h of the prompt's prefill iterations from the
+slot-occupancy time (KV memory per slot is unchanged, so n_max and the
+cliff are unchanged):
+
+    E[S] = (ceil((1-h) L_in / C_chunk) + L_out) * t_iter.
+
+This bench sizes the pool-routing fleet at several hit rates. The
+RESULT IS NEGATIVE (and informative): with realistic output lengths,
+slot occupancy is dominated by decode iterations (L_out >> prefill
+chunks), so even an 80 % hit rate shrinks the fleet by ~0-1.3 %.
+Prefix caching is a TTFT lever, not a capacity lever, under the
+paper's service model — unlike C&R, whose savings come from the slot
+COUNT side (n_max), not the occupancy side. See EXPERIMENTS §Findings."""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import planner as PL
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload
+
+
+def run(lam: float = 1000.0, t_slo: float = 0.5):
+    rows = []
+    for name in ("lmsys", "azure"):
+        w = get_workload(name)
+        s = PL._draw(w)
+        base_total = None
+        for h in (0.0, 0.5, 0.8):
+            (lin_s, lout_s), (lin_l, lout_l), a_eff = PL._split(
+                s, w.b_short, 1.5)
+            short = PL.size_pool(a_eff * lam, (1 - h) * lin_s, lout_s,
+                                 A100_LLAMA70B, w.b_short, t_slo)
+            long = PL.size_pool((1 - a_eff) * lam, (1 - h) * lin_l, lout_l,
+                                A100_LLAMA70B, 65536, t_slo)
+            total = short.n_gpus + long.n_gpus
+            if base_total is None:
+                base_total = total
+            rows.append({
+                "workload": name, "prefix_hit_rate": h,
+                "n_s": short.n_gpus, "n_l": long.n_gpus, "total": total,
+                "saving_vs_h0_pct": round(100 * (1 - total / base_total), 1),
+                "mean_prefill_iters_s": round(
+                    short.moments.mean_prefill_iters, 2),
+            })
+    emit("prefix_cache", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

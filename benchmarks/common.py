@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(table: str, rows: List[dict]) -> None:
+    """Print a paper-table reproduction as CSV and save it."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if not rows:
+        print(f"# {table}: EMPTY")
+        return
+    cols = list(rows[0].keys())
+    for r in rows[1:]:
+        cols += [c for c in r if c not in cols]
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(_fmt(r.get(c, "")) for c in cols))
+    text = "\n".join(lines)
+    print(f"\n# ===== {table} =====")
+    print(text)
+    with open(os.path.join(RESULTS_DIR, f"{table}.csv"), "w") as f:
+        f.write(text + "\n")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def timeit_us(fn: Callable, n: int = 5) -> float:
+    fn()   # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6

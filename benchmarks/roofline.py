@@ -1,0 +1,150 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun)
+and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+  memory term     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective term = sum(traffic_i) / link_bw        (50 GB/s/link ICI)
+
+FLOPs/bytes are per-device (the SPMD module is the per-device program;
+loop trip counts already corrected by the dry-run's depth-variant
+extrapolation). Collective traffic uses result-bytes with per-op
+factors: all-reduce 2x (ring: reduce-scatter + all-gather), everything
+else 1x; xLSTM's sequential sLSTM time-scan is corrected analytically
+(the scan body is counted once by XLA; see slstm_correction)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.configs.base import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link
+TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                  "reduce-scatter": 1.0, "all-to-all": 1.0,
+                  "collective-permute": 1.0}
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def slstm_correction(arch: str, shape_name: str, n_devices: int) -> float:
+    """Extra per-device FLOPs for xLSTM's sequential sLSTM scan: the
+    body (recurrent einsum B*4*D*hp per layer) runs T times but is
+    counted once by cost_analysis (and is not unrolled — T=4096+)."""
+    cfg = get_config(arch)
+    if cfg.family != "ssm" or not cfg.ssm.block_pattern:
+        return 0.0
+    n_slstm = sum(k == "slstm" for k in cfg.ssm.block_pattern) \
+        * (cfg.num_layers // len(cfg.ssm.block_pattern))
+    sh = INPUT_SHAPES[shape_name]
+    t = sh.seq_len if sh.kind != "decode" else 1
+    b = sh.global_batch
+    hp = cfg.d_model // cfg.num_heads
+    per_step = 2 * b * cfg.num_heads * hp * 4 * hp   # recurrent matmul
+    return (t - 1) * per_step * n_slstm / n_devices
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N_active*tokens for
+    inference (forward only); attention context terms excluded by
+    convention (this is the 'useful work' yardstick)."""
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape_name]
+    n_active = cfg.num_active_params()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.global_batch          # one token/seq
+
+
+def load_records(mesh: Optional[str] = None,
+                 base_dir: Optional[str] = None) -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(base_dir or DRYRUN_DIR,
+                                           "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        recs.append(d)
+    return recs
+
+
+def roofline_row(rec: dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "error" in rec.get("extrapolated", {}):
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": rec.get("status", "?")}
+    ex = rec["extrapolated"]
+    ndev = rec["n_devices"]
+    flops = ex["flops"] + slstm_correction(rec["arch"], rec["shape"], ndev)
+    t_comp = flops / PEAK_FLOPS
+    t_mem = ex["bytes"] / HBM_BW
+    coll = ex["collectives"]
+    t_coll = sum(max(v, 0.0) * TRAFFIC_FACTOR.get(k, 1.0)
+                 for k, v in coll.items()) / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops * ndev
+    mem = rec.get("memory_analysis", {})
+    hbm_gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("output_size_in_bytes", 0)
+              - mem.get("alias_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 1e9
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok",
+        "t_compute_ms": round(t_comp * 1e3, 3),
+        "t_memory_ms": round(t_mem * 1e3, 3),
+        "t_collective_ms": round(t_coll * 1e3, 3),
+        "dominant": dominant,
+        "model_flops_ratio": round(mf / hlo_total, 3) if hlo_total else 0.0,
+        "hbm_gb_per_dev": round(hbm_gb, 2),
+        "fits_16gb": hbm_gb <= 16.0,
+        "bound_step_ms": round(max(t_comp, t_mem, t_coll) * 1e3, 3),
+    }
+
+
+def what_would_help(row: dict) -> str:
+    if row.get("status") != "ok":
+        return "n/a"
+    d = row["dominant"]
+    if d == "compute":
+        if row["model_flops_ratio"] < 0.5:
+            return ("compute-bound with low useful-FLOP ratio: cut remat "
+                    "recompute / masked-attention waste (flash kernel)")
+        return "compute-bound near peak: only batching/quantization help"
+    if d == "memory":
+        return ("memory-bound: shrink resident bytes (bf16 cache, fused "
+                "one-hot-free scatter, better layouts)")
+    return ("collective-bound: reshard to cut the dominant collective "
+            "(weight-stationary layouts, overlap a2a with compute)")
+
+
+def run(mesh: str = "16x16", tag: str = "", base_dir: Optional[str] = None):
+    rows = [roofline_row(r) for r in load_records(mesh, base_dir)]
+    rows = [r for r in rows if r]
+    for r in rows:
+        r["recommendation"] = what_would_help(r)
+    emit(f"roofline_{mesh.replace('x', '_')}{tag}", rows)
+    return rows
+
+
+def run_optimized(mesh: str = "16x16"):
+    opt_dir = os.path.join(RESULTS_DIR, "dryrun_opt")
+    if os.path.isdir(opt_dir) and os.listdir(opt_dir):
+        return run(mesh, tag="_opt", base_dir=opt_dir)
+    return []
+
+
+if __name__ == "__main__":
+    run("16x16")
+    run("2x16x16")
+    run_optimized()

@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table + roofline summary.
+
+Run: PYTHONPATH=src python -m benchmarks.run
+(the roofline tables need benchmarks/results/dryrun/*.json from
+``python -m repro.launch.dryrun``; they are skipped if absent).
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (bench_arch_cliff, bench_arrival_sweep,
+                            bench_borderline, bench_burstiness,
+                            bench_compression_fidelity,
+                            bench_compression_latency, bench_cost_cliff,
+                            bench_des_validation, bench_fleet_savings,
+                            bench_foc_verification, bench_gamma_surface,
+                            bench_planner_latency, bench_prefix_cache,
+                            bench_speculative, roofline)
+    t0 = time.time()
+    bench_cost_cliff.run()            # paper Table 1
+    bench_borderline.run()            # paper Table 2
+    bench_fleet_savings.run()         # paper Table 3
+    bench_compression_latency.run()   # paper Table 4
+    bench_des_validation.run()        # paper Table 5
+    bench_arrival_sweep.run()         # paper Table 6
+    bench_compression_fidelity.run()  # paper Table 7 / App. C
+    bench_planner_latency.run()       # paper §6 claim
+    bench_arch_cliff.run()            # beyond-paper: per-arch cliff
+    bench_foc_verification.run()      # Prop. 1 FOC, numerically
+    bench_gamma_surface.run()         # Algorithm 1 cost surface
+    bench_burstiness.run()            # beyond-paper: MMPP arrivals
+    bench_prefix_cache.run()          # beyond-paper: negative result
+    bench_speculative.run()           # beyond-paper: occupancy lever
+    if os.path.isdir(roofline.DRYRUN_DIR) and \
+            os.listdir(roofline.DRYRUN_DIR):
+        roofline.run("16x16")
+        roofline.run("2x16x16")
+        roofline.run_optimized()   # post-§Perf records, where regenerated
+    else:
+        print("\n# roofline: no dry-run records found "
+              "(run python -m repro.launch.dryrun first)")
+    print(f"\nbenchmarks completed in {time.time() - t0:.1f}s; "
+          "CSVs in benchmarks/results/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Plan a fleet, then validate the plan against the discrete-event
+simulator — the paper's full §7 loop in one script.
+
+Run: PYTHONPATH=src python examples/plan_and_simulate.py [--workload azure]
+"""
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.planner import fleetopt_plan, plan_homogeneous, \
+    plan_two_pool                                                # noqa: E402
+from repro.core.profiles import A100_LLAMA70B, TPU_V5E_LLAMA70B  # noqa: E402
+from repro.core.workload import get_workload                    # noqa: E402
+from repro.sim.des import FleetDES                               # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="azure",
+                    choices=["azure", "lmsys", "agent-heavy"])
+    ap.add_argument("--lam", type=float, default=1000.0)
+    ap.add_argument("--profile", default="a100",
+                    choices=["a100", "tpu-v5e"])
+    args = ap.parse_args()
+    profile = A100_LLAMA70B if args.profile == "a100" else TPU_V5E_LLAMA70B
+
+    w = get_workload(args.workload)
+    homo = plan_homogeneous(w, args.lam, 0.5, profile)
+    pr = plan_two_pool(w, args.lam, 0.5, profile, w.b_short, 1.0)
+    plan, _ = fleetopt_plan(w, args.lam, 0.5, profile)
+    print(f"workload={w.name} (archetype {w.archetype})  "
+          f"profile={profile.name}")
+    print(f"  homogeneous: {homo.total_gpus} GPUs")
+    print(f"  pool routing: n_s={pr.short.n_gpus} n_l={pr.long.n_gpus} "
+          f"({1 - pr.total_gpus / homo.total_gpus:.1%} saving)")
+    print(f"  FleetOpt    : {plan.summary()} "
+          f"({1 - plan.total_gpus / homo.total_gpus:.1%} saving)")
+
+    print("\nDES validation (paper Table 5 methodology):")
+    des = FleetDES(plan, profile, w)
+    for name, st in des.run(lam=args.lam, seed=4).items():
+        pool = plan.short if name == "short" else plan.long
+        err = (pool.utilization - st.utilization) / max(st.utilization, 1e-9)
+        print(f"  {name:5s}: rho_ana={pool.utilization:.3f} "
+              f"rho_des={st.utilization:.3f} err={err:+.1%} "
+              f"ttft_p99={st.ttft_p99()*1e3:.0f}ms (SLO 500ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: plan a fleet with FleetOpt in ~10 lines.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.planner import fleetopt_plan, plan_homogeneous  # noqa: E402
+from repro.core.profiles import A100_LLAMA70B                   # noqa: E402
+from repro.core.workload import get_workload                    # noqa: E402
+
+
+def main():
+    workload = get_workload("azure")        # or "lmsys" / "agent-heavy"
+    homo = plan_homogeneous(workload, lam=1000.0, t_slo=0.5,
+                            profile=A100_LLAMA70B)
+    plan, grid = fleetopt_plan(workload, lam=1000.0, t_slo=0.5,
+                               profile=A100_LLAMA70B)
+    print(f"homogeneous 64K fleet : {homo.total_gpus} GPUs "
+          f"(${homo.annual_cost/1e3:.0f}K/yr)")
+    print(f"FleetOpt              : {plan.summary()}")
+    print(f"saving                : "
+          f"{1 - plan.total_gpus / homo.total_gpus:.1%}")
+    print(f"effective alpha'      : {plan.alpha_eff:.3f} "
+          f"(alpha={workload.alpha():.3f}, beta={workload.beta():.3f}, "
+          f"p_c={workload.p_c})")
+    best = sorted(grid.items(), key=lambda kv: kv[1])[:5]
+    print("top (B_short, gamma) points:",
+          [f"B={b} g={g} ${c/1e3:.0f}K" for (b, g), c in best])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+MoE: 16 routed experts, top-1, plus the model card's 1 shared expert.
+Uses chunked/windowed attention (iRoPE, 8K chunks) natively, so
+``long_500k`` runs without a synthetic sliding-window override.
+Early-fusion multimodality: text-only backbone here (vision tokens would
+arrive pre-embedded like the VLM stub).
+"""
+from repro.configs.base import MOE, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family=MOE,
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    activation="silu",
+    attention_window=8192,   # iRoPE chunked attention
+    rope_theta=500000.0,
+    moe=MoEConfig(num_experts=16, top_k=1, num_shared_experts=1,
+                  expert_d_ff=8192),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+))

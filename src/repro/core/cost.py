@@ -1,0 +1,49 @@
+"""Cost-cliff and GPU-savings formulas (paper §2.2, §5.1)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.profiles import HardwareProfile
+
+
+def cliff_ratio(profile: HardwareProfile, b_short: int, c_max_long: int = 65536
+                ) -> float:
+    """rho = n_max^(s) / n_max^(l): throughput-capacity penalty for the
+    first token above B_short (paper §2.2; 8x @8K, 16x @4K, 42x @1.5K)."""
+    return profile.n_max(b_short) / profile.n_max(c_max_long)
+
+
+def pool_routing_savings(alpha: float, rho: float) -> float:
+    """GPU savings fraction for plain pool routing: alpha * (1 - 1/rho)."""
+    return alpha * (1.0 - 1.0 / rho)
+
+
+def cr_incremental_savings(beta: float, p_c: float, rho: float) -> float:
+    """Additional savings from C&R beyond pool routing (paper Eq. 14):
+    delta_alpha * (1 - 1/rho) with delta_alpha = beta * p_c."""
+    return beta * p_c * (1.0 - 1.0 / rho)
+
+
+@dataclasses.dataclass(frozen=True)
+class CliffRow:
+    """One row of the paper's Table 1 (cost-cliff illustration)."""
+    l_total: int
+    pool: str
+    slots_per_gpu: int
+    kv_utilised_frac: float
+    cost_ratio: float
+
+
+def cliff_table(profile: HardwareProfile, b_short: int = 8192,
+                c_max_long: int = 65536) -> list:
+    """Reproduce paper Table 1: capacity consumed around B_short."""
+    n_s = profile.n_max(b_short)
+    n_l = profile.n_max(c_max_long)
+    rho = n_s / n_l
+    rows = []
+    for l in (b_short, b_short + 1, 12000, c_max_long):
+        if l <= b_short:
+            rows.append(CliffRow(l, "short", n_s, l / b_short, 1.0))
+        else:
+            rows.append(CliffRow(l, "long", n_l, l / c_max_long, rho))
+    return rows

@@ -1,0 +1,239 @@
+"""FleetOpt offline planner (paper §6, Algorithm 1).
+
+Given a workload (CDF + output-length model), an arrival rate, a P99
+TTFT SLO and a hardware profile, returns the optimal
+(n_s*, n_l*, B_short*, gamma*). Also exposes the single-pool
+(homogeneous) and fixed-(B, gamma) sizings used by the paper's
+baselines (Table 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiles import A100_LLAMA70B, HardwareProfile
+from repro.core.queueing import ServiceMoments, kimura_w99, service_moments
+from repro.core.workload import Workload
+
+RHO_MAX = 0.85          # utilization cap (paper §4.1)
+GAMMA_GRID = tuple(round(1.0 + 0.1 * i, 1) for i in range(11))  # 1.0 .. 2.0
+DEFAULT_B_CANDIDATES = (1024, 1536, 2048, 3072, 4096, 6144, 8192, 12288, 16384)
+_N_MC = 30_000          # Monte-Carlo sample size for service moments
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPlan:
+    n_gpus: int
+    n_max: int               # slots per GPU
+    c_max: int               # pool context window (tokens)
+    lam: float               # arrival rate into the pool (req/s)
+    mu_gpu: float            # GPU-level service rate (req/s)
+    utilization: float       # rho_ana = lam / (n * mu_gpu)
+    w99_s: float             # P99 queue wait (s)
+    ttft_p99_s: float        # W99 + P99 prefill + one decode iter
+    moments: ServiceMoments
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    workload: str
+    b_short: int
+    gamma: float
+    short: Optional[PoolPlan]
+    long: Optional[PoolPlan]
+    annual_cost: float
+    total_gpus: int
+    alpha_eff: float         # alpha' = alpha + beta * p_c
+
+    def summary(self) -> str:
+        s = self.short.n_gpus if self.short else 0
+        l = self.long.n_gpus if self.long else 0
+        return (f"{self.workload}: B*={self.b_short} gamma*={self.gamma} "
+                f"n_s={s} n_l={l} total={self.total_gpus} "
+                f"cost=${self.annual_cost/1e3:.0f}K/yr")
+
+
+class Infeasible(RuntimeError):
+    pass
+
+
+def size_pool(lam_p: float, l_in: np.ndarray, l_out: np.ndarray,
+              profile: HardwareProfile, c_max: int, t_slo: float,
+              rho_max: float = RHO_MAX, prefill_stat: str = "mean",
+              tail_margin: float = 0.0) -> PoolPlan:
+    """Minimum GPU count for one pool (paper Eq. 11 + rho_max floor).
+
+    Prefill chunks run compute-bound at W ms/chunk (not the decode
+    iteration latency W + H*n): the paper's reported per-pool TTFTs
+    (§7.4) are only consistent with this reading — see DESIGN.md §6.
+    ``prefill_stat="p99"`` selects the strict Eq. 8 form.
+
+    ``tail_margin`` (beyond-paper, EXPERIMENTS.md §Findings): for SMALL
+    pools with heavy-tailed service times the Kimura two-moment P99
+    wait underestimates badly (DES shows multi-second waits where the
+    approximation says ~0). A margin of k sigmas enforces
+    c >= a + k*sqrt(a*(1+Cs^2)) slots for offered load a = lam*E[S]
+    (Gaussian bound on Poisson occupancy). 0 = paper-faithful.
+    """
+    n_max = profile.n_max(c_max)
+    t_iter = profile.t_iter(c_max)
+    if lam_p <= 0 or len(l_in) == 0:
+        m = ServiceMoments(0.0, 0.0, 0.0, 0.0)
+        return PoolPlan(0, n_max, c_max, 0.0, math.inf, 0.0, 0.0, 0.0, m)
+    m = service_moments(l_in, l_out, t_iter, profile.c_chunk)
+    mu_slot = m.mu
+    mu_gpu = n_max * mu_slot
+    t_chunk = profile.w_ms / 1000.0          # compute-bound prefill chunk
+    iters = (m.p99_prefill_iters if prefill_stat == "p99"
+             else m.mean_prefill_iters)
+    t_prefill = iters * t_chunk
+    t_slo_eff = t_slo - t_prefill - t_iter              # Eq. 8
+    if t_slo_eff <= 0:
+        raise Infeasible(
+            f"prefill ({t_prefill*1e3:.0f} ms, stat={prefill_stat}) exceeds "
+            f"the {t_slo*1e3:.0f} ms TTFT SLO for c_max={c_max}")
+
+    n_util = math.ceil(lam_p / (rho_max * mu_gpu))      # utilization floor
+    if tail_margin > 0:
+        a = lam_p * m.mean                              # offered slot load
+        c_safe = a + tail_margin * math.sqrt(a * (1.0 + m.cs2))
+        n_util = max(n_util, math.ceil(c_safe / n_max))
+
+    def w99(n: int) -> float:
+        return kimura_w99(n * n_max, mu_slot, lam_p, m.cs2)
+
+    lo = max(1, n_util)
+    hi = max(lo, int(10 * math.ceil(lam_p / mu_gpu)) + 1)
+    if w99(lo) <= t_slo_eff:
+        n = lo
+    else:
+        while w99(hi) > t_slo_eff:
+            hi *= 2
+            if hi > 10_000_000:
+                raise Infeasible("Erlang-C inversion diverged")
+        # binary search the smallest feasible n in (lo, hi]
+        while lo + 1 < hi:
+            mid = (lo + hi) // 2
+            if w99(mid) <= t_slo_eff:
+                hi = mid
+            else:
+                lo = mid
+        n = hi
+    w = w99(n)
+    return PoolPlan(
+        n_gpus=n, n_max=n_max, c_max=c_max, lam=lam_p, mu_gpu=mu_gpu,
+        utilization=lam_p / (n * mu_gpu), w99_s=w,
+        ttft_p99_s=w + t_prefill + t_iter, moments=m)
+
+
+@dataclasses.dataclass
+class _Samples:
+    """One reusable Monte-Carlo draw from the workload."""
+    l_total: np.ndarray
+    l_in: np.ndarray
+    l_out: np.ndarray
+    compressible: np.ndarray  # Bernoulli(p_c) mask, fixed across the sweep
+
+
+def _draw(workload: Workload, seed: int = 0, n: int = _N_MC) -> _Samples:
+    l_total, l_in, l_out = workload.sample_arrays(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    compressible = rng.uniform(size=n) < workload.p_c
+    return _Samples(l_total, l_in, l_out, compressible)
+
+
+def _split(s: _Samples, b: int, gamma: float
+           ) -> Tuple[Tuple[np.ndarray, np.ndarray],
+                      Tuple[np.ndarray, np.ndarray], float]:
+    """Route samples for boundary ``b`` and compression bandwidth ``gamma``.
+
+    Returns ((l_in_s, l_out_s), (l_in_l, l_out_l), alpha_eff). Compressed
+    borderline requests enter the short pool with l_in' = b - l_out
+    (Eq. 15: T_c + L_out = B_short, the hard no-OOM budget).
+    """
+    below = s.l_total <= b
+    borderline = (~below) & (s.l_total <= gamma * b)
+    compressed = borderline & s.compressible
+    to_long = ~(below | compressed)
+
+    lin_s = np.concatenate([
+        s.l_in[below],
+        np.maximum(np.minimum(s.l_in[compressed], b - s.l_out[compressed]), 1)])
+    lout_s = np.concatenate([s.l_out[below], s.l_out[compressed]])
+    alpha_eff = 1.0 - to_long.mean()
+    return (lin_s, lout_s), (s.l_in[to_long], s.l_out[to_long]), float(alpha_eff)
+
+
+def plan_two_pool(workload: Workload, lam: float, t_slo: float,
+                  profile: HardwareProfile, b_short: int, gamma: float,
+                  c_max_long: int = 65536, samples: Optional[_Samples] = None,
+                  rho_max: float = RHO_MAX,
+                  tail_margin: float = 0.0) -> FleetPlan:
+    """Size a two-pool fleet at a FIXED (B_short, gamma) — the paper's
+    PR (gamma=1) and PR+C&R retrofit (gamma=1.5) baselines."""
+    s = samples or _draw(workload)
+    (lin_s, lout_s), (lin_l, lout_l), alpha_eff = _split(s, b_short, gamma)
+    lam_s, lam_l = alpha_eff * lam, (1.0 - alpha_eff) * lam
+    short = size_pool(lam_s, lin_s, lout_s, profile, b_short, t_slo,
+                      rho_max, tail_margin=tail_margin)
+    long = size_pool(lam_l, lin_l, lout_l, profile, c_max_long, t_slo,
+                     rho_max, tail_margin=tail_margin)
+    total = short.n_gpus + long.n_gpus
+    return FleetPlan(
+        workload=workload.name, b_short=b_short, gamma=gamma,
+        short=short, long=long,
+        annual_cost=profile.annual_cost(total), total_gpus=total,
+        alpha_eff=alpha_eff)
+
+
+def plan_homogeneous(workload: Workload, lam: float, t_slo: float,
+                     profile: HardwareProfile, c_max: int = 65536,
+                     rho_max: float = RHO_MAX) -> FleetPlan:
+    """Single pool sized for worst-case context (paper baseline 1)."""
+    s = _draw(workload)
+    pool = size_pool(lam, s.l_in, s.l_out, profile, c_max, t_slo, rho_max)
+    return FleetPlan(
+        workload=workload.name, b_short=c_max, gamma=1.0, short=None,
+        long=pool, annual_cost=profile.annual_cost(pool.n_gpus),
+        total_gpus=pool.n_gpus, alpha_eff=0.0)
+
+
+def fleetopt_plan(workload: Workload, lam: float = 1000.0,
+                  t_slo: float = 0.5,
+                  profile: HardwareProfile = A100_LLAMA70B,
+                  b_candidates: Sequence[int] = DEFAULT_B_CANDIDATES,
+                  gamma_grid: Sequence[float] = GAMMA_GRID,
+                  c_max_long: int = 65536,
+                  rho_max: float = RHO_MAX,
+                  fixed_b: Optional[int] = None,
+                  tail_margin: float = 0.0,
+                  ) -> Tuple[FleetPlan, Dict[Tuple[int, float], float]]:
+    """Algorithm 1: sweep (B, gamma), recalibrating mu_l from the
+    post-compression distribution at every point (the paper's critical
+    step 6 — _split keeps only l_total > gamma*B in the long pool).
+
+    Returns (best_plan, {(B, gamma): annual_cost})."""
+    s = _draw(workload)
+    grid: Dict[Tuple[int, float], float] = {}
+    best: Optional[FleetPlan] = None
+    cands = [fixed_b] if fixed_b else [b for b in b_candidates if b < c_max_long]
+    for b in cands:
+        for g in gamma_grid:
+            try:
+                p = plan_two_pool(workload, lam, t_slo, profile, b, g,
+                                  c_max_long, samples=s, rho_max=rho_max,
+                                  tail_margin=tail_margin)
+            except Infeasible:
+                continue
+            grid[(b, g)] = p.annual_cost
+            if best is None or p.annual_cost < best.annual_cost or (
+                    # prefer smaller gamma on cost ties (less compression risk)
+                    p.annual_cost == best.annual_cost and
+                    (b, g) == (best.b_short, best.gamma)):
+                best = p
+    if best is None:
+        raise Infeasible("no feasible (B, gamma) point")
+    return best, grid

@@ -1,0 +1,156 @@
+"""Gateway router (paper §2.1, §5): token estimation, pool decision,
+borderline interception and Compress-and-Route.
+
+The router is control-plane only (host-side): it never touches device
+state. The serving runtime (repro/serving/pools.py) gives it the pool
+handles; the DES (repro/sim) gives it synthetic requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.compression import ExtractiveCompressor, count_tokens
+from repro.core.workload import COMPRESSIBLE, Request
+
+SHORT, LONG = "short", "long"
+
+
+class BytesPerTokenEMA:
+    """Per-category bytes-per-token estimate c_hat_k (paper §2.1).
+
+    Updated from completed requests (actual tokenizer counts) with
+    exponential decay; seeds at 4.0 bytes/token.
+    """
+
+    def __init__(self, decay: float = 0.95, seed_value: float = 4.0):
+        self.decay = decay
+        self._est: Dict[str, float] = {}
+        self._seed = seed_value
+
+    def get(self, category: str) -> float:
+        return self._est.get(category, self._seed)
+
+    def update(self, category: str, prompt_bytes: int, true_tokens: int) -> None:
+        if true_tokens <= 0:
+            return
+        obs = prompt_bytes / true_tokens
+        cur = self._est.get(category, self._seed)
+        self._est[category] = self.decay * cur + (1 - self.decay) * obs
+
+
+@dataclasses.dataclass
+class RoutingDecision:
+    pool: str                      # "short" | "long"
+    l_total_effective: int         # token budget after any compression
+    compressed: bool
+    compression_ms: float = 0.0
+    l_in_effective: int = 0
+    compressed_text: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RouterStats:
+    total: int = 0
+    to_short: int = 0
+    to_long: int = 0
+    borderline: int = 0
+    compressed_ok: int = 0
+    compression_attempts: int = 0
+    compression_ms_sum: float = 0.0
+
+    @property
+    def alpha_observed(self) -> float:
+        return self.to_short / self.total if self.total else 0.0
+
+    @property
+    def p_c_observed(self) -> float:
+        if not self.compression_attempts:
+            return 0.0
+        return self.compressed_ok / self.compression_attempts
+
+    @property
+    def mean_overhead_ms(self) -> float:
+        """Mean compression overhead across ALL requests (paper Table 4)."""
+        return self.compression_ms_sum / self.total if self.total else 0.0
+
+
+class GatewayRouter:
+    """Two-pool router with Compress-and-Route (paper §5.1).
+
+    A request with B_short < L_total <= gamma*B_short whose category
+    passes the content-type safety gate is compressed to
+    T_c = B_short - L_out and re-routed to the short pool; the virtual
+    short-pool capacity becomes gamma*B_short with no hardware change.
+    """
+
+    def __init__(self, b_short: int, gamma: float = 1.5,
+                 compressor: Optional[ExtractiveCompressor] = None,
+                 p_c: float = 1.0, seed: int = 0):
+        self.b_short = b_short
+        self.gamma = gamma
+        self.compressor = compressor or ExtractiveCompressor()
+        self.ema = BytesPerTokenEMA()
+        self.stats = RouterStats()
+        # simulation fallback when requests carry no prompt text
+        self._p_c = p_c
+        self._rng = np.random.default_rng(seed)
+
+    # -- token budget estimate (paper §2.1) --------------------------------
+    def estimate_l_total(self, req: Request) -> int:
+        c_hat = self.ema.get(req.category)
+        prompt_tokens = math.ceil(req.prompt_bytes / c_hat) \
+            if req.prompt_bytes else req.l_in
+        return prompt_tokens + req.l_out   # l_out == r.max_output_tokens
+
+    # -- main entry ---------------------------------------------------------
+    def route(self, req: Request, prompt_text: Optional[str] = None
+              ) -> RoutingDecision:
+        self.stats.total += 1
+        l_total = self.estimate_l_total(req)
+        if l_total <= self.b_short:
+            self.stats.to_short += 1
+            return RoutingDecision(SHORT, l_total, False,
+                                   l_in_effective=req.l_in)
+        if l_total <= self.gamma * self.b_short:
+            self.stats.borderline += 1
+            if req.category in COMPRESSIBLE:
+                return self._compress_and_route(req, prompt_text, l_total)
+        self.stats.to_long += 1
+        return RoutingDecision(LONG, l_total, False, l_in_effective=req.l_in)
+
+    def _compress_and_route(self, req: Request, text: Optional[str],
+                            l_total: int) -> RoutingDecision:
+        budget = self.b_short - req.l_out       # T_c (Eq. 15)
+        if budget <= 0:
+            self.stats.to_long += 1
+            return RoutingDecision(LONG, l_total, False,
+                                   l_in_effective=req.l_in)
+        self.stats.compression_attempts += 1
+        if text is not None:
+            res = self.compressor.compress(text, budget)
+            self.stats.compression_ms_sum += res.latency_ms
+            if res.success:
+                self.stats.compressed_ok += 1
+                self.stats.to_short += 1
+                # hard OOM guarantee (Eq. 15): T_c + L_out <= B_short
+                assert res.compressed_tokens + req.l_out <= self.b_short
+                return RoutingDecision(
+                    SHORT, res.compressed_tokens + req.l_out, True,
+                    res.latency_ms, l_in_effective=res.compressed_tokens,
+                    compressed_text=res.text)
+        else:
+            # DES path: Bernoulli(p_c) success, latency from the measured
+            # distribution (paper Table 4: 2-7 ms).
+            ms = float(self._rng.uniform(2.0, 7.0))
+            self.stats.compression_ms_sum += ms
+            if self._rng.uniform() < self._p_c:
+                self.stats.compressed_ok += 1
+                self.stats.to_short += 1
+                return RoutingDecision(SHORT, self.b_short, True, ms,
+                                       l_in_effective=budget)
+        self.stats.to_long += 1
+        return RoutingDecision(LONG, l_total, False, l_in_effective=req.l_in)

@@ -1,0 +1,35 @@
+"""Parallel context: which mesh axes play which role.
+
+data axes ("pod", "data") shard the batch; the "model" axis shards
+weights (tensor parallel) and doubles as the expert-parallel axis for
+MoE dispatch (experts live where their weight shard lives). Passing
+``parallel=None`` to the model runs everything local — the CPU smoke
+path."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.data_axes) + (self.model_axis,)
+
+    @property
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+def make_context(mesh: Mesh) -> ParallelContext:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a != "model")
+    return ParallelContext(mesh=mesh, data_axes=data_axes)

@@ -1,0 +1,216 @@
+"""PartitionSpec rules for params, optimizer state, batches and caches.
+
+Megatron-style tensor parallelism on the "model" axis:
+  * attention q/k/v and MLP up/gate shard their OUTPUT features,
+  * attention out and MLP down shard their INPUT features (row-parallel
+    — XLA inserts the all-reduce on the residual add),
+  * embeddings shard the vocab dim; lm_head shards vocab (output),
+  * MoE expert weights shard the EXPERT dim (expert parallel; the
+    shard_map in moe.py consumes them pre-sliced),
+  * small recurrent (Mamba2/xLSTM) cores are replicated — these models
+    are < 4B params and data-parallel-dominant (DESIGN.md §5); the
+    hybrid arch's shared attention block still shards like attention.
+
+pjit *argument* shardings demand exact divisibility (GSPMD pads only
+intermediates), so every rule here is divisibility-guarded with
+fallbacks: e.g. a KV cache whose 8 kv-heads don't divide the 16-way
+model axis shards its SEQUENCE dim over the model axis instead
+(flash-decode-style context parallelism), and seamless's vocab 256,206
+(not divisible by 16) flips the embedding sharding onto d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import ParallelContext
+
+# Tunable sharding choices explored in EXPERIMENTS.md §Perf. Values are
+# the POST-hillclimb defaults; the paper-faithful/first-cut baselines
+# are noted per key.
+OPTIONS = {
+    # MLA latent cache: "lora" (baseline: shard the 512-dim latent over
+    # the model axis -> XLA all-gathers the whole cache per layer) or
+    # "seq" (context-parallel: shard cache sequence dim over model).
+    # §Perf iteration 1: seq cuts deepseek decode_32k all-gather 285x.
+    "mla_cache": "seq",
+}
+
+
+def set_baseline():
+    """Paper-faithful/first-cut sharding (the §Perf baselines)."""
+    OPTIONS["mla_cache"] = "lora"
+
+# leaf names whose LAST dim is the sharded output-feature dim
+_COL_PARALLEL = {"wq", "wk", "wv", "up", "gate", "wuk", "wuv",
+                 "bq", "bk", "bv"}
+# leaf names whose SECOND-TO-LAST dim is the sharded input-feature dim
+_ROW_PARALLEL = {"wo", "down"}
+# MoE expert-stacked weights: dim -3 is the expert dim
+_EXPERT = {"w_gate", "w_up", "w_down"}
+
+
+def _path_names(path):
+    return [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+
+
+def _guarded(shape: Sequence[int], candidates, axis_size: int, axes) -> P:
+    """First candidate dim list whose every sharded dim divides."""
+    for dims in candidates:
+        if all(shape[d] % axis_size == 0 for d in dims):
+            spec = [None] * len(shape)
+            for d in dims:
+                spec[d] = axes
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def param_spec(path, leaf, mx: str = "model", mx_size: int = 16) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    nd = leaf.ndim
+    shape = leaf.shape
+    in_ssm_core = any(n in ("mamba", "core") for n in names)
+    in_shared_moe = "shared" in names
+    if name == "embed":      # prefer vocab-sharded; fall back to d_model
+        return _guarded(shape, [(0,), (1,)], mx_size, mx)
+    if name == "lm_head":
+        return _guarded(shape, [(1,), (0,)], mx_size, mx)
+    if in_shared_moe or in_ssm_core:
+        return P(*([None] * nd))    # replicated (see module docstring)
+    if name in _EXPERT and "moe" in names:
+        return _guarded(shape, [(nd - 3,)], mx_size, mx)
+    if name in _COL_PARALLEL and nd >= 1:
+        return _guarded(shape, [(nd - 1,)], mx_size, mx)
+    if name in _ROW_PARALLEL and nd >= 2:
+        return _guarded(shape, [(nd - 2,), (nd - 1,)], mx_size, mx)
+    return P(*([None] * nd))
+
+
+def param_specs(params_shapes: Any, ctx: ParallelContext) -> Any:
+    """Pytree of PartitionSpec matching a params (or shape) pytree."""
+    mx = ctx.model_axis
+    mx_size = ctx.mesh.shape[mx]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mx, mx_size),
+        params_shapes)
+
+
+def opt_specs(opt_shapes: Any, pspecs: Any, ctx: Optional[ParallelContext]
+              = None, zero1: bool = False) -> Any:
+    """AdamW state: m/v follow their param's spec; step replicated.
+
+    ``zero1``: additionally shard the first still-replicated, divisible
+    dim of each m/v leaf over the data axes (ZeRO-1, the beyond-paper
+    memory optimization explored in EXPERIMENTS.md §Perf)."""
+    m = pspecs
+    if zero1 and ctx is not None:
+        dpn = _dp_size(ctx)
+        dp = tuple(ctx.data_axes)
+
+        def z1(spec, leaf):
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            for i, s in enumerate(parts):
+                if s is None and leaf.shape[i] % dpn == 0:
+                    parts[i] = dp
+                    return P(*parts)
+            return spec
+        m = jax.tree.map(z1, pspecs, opt_shapes.m,
+                         is_leaf=lambda x: isinstance(x, P))
+    import repro.training.optimizer as O
+    return O.AdamWState(step=P(), m=m, v=m)
+
+
+def _dp_size(ctx: ParallelContext) -> int:
+    n = 1
+    for a in ctx.data_axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def batch_specs(batch_shapes: Any, ctx: ParallelContext) -> Any:
+    dp = tuple(ctx.data_axes)
+    dpn = _dp_size(ctx)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dpn:
+            return P(*([None] * leaf.ndim))
+        return P(dp, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def logits_spec(ctx: ParallelContext, batch: int, vocab: int) -> P:
+    dp = tuple(ctx.data_axes)
+    b_ok = batch % _dp_size(ctx) == 0
+    v_ok = vocab % ctx.mesh.shape[ctx.model_axis] == 0
+    return P(dp if b_ok else None, ctx.model_axis if v_ok else None)
+
+
+def cache_specs(cache_shapes: Any, ctx: ParallelContext, batch: int) -> Any:
+    """Decode-cache specs: batch dim -> data axes; head/latent dims ->
+    model axis (seq dim as fallback when heads don't divide)."""
+    dp = tuple(ctx.data_axes)
+    mx = ctx.model_axis
+    mxn = ctx.mesh.shape[mx]
+    dpn = _dp_size(ctx)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        s: list = [None] * nd
+        shape = leaf.shape
+        bdim = None
+        if batch > 1 and batch % dpn == 0:
+            for i, d in enumerate(shape):
+                if d == batch:
+                    bdim = i
+                    break
+        if name in ("k_scale", "v_scale"):
+            seq_dim, head_dim = nd - 2, nd - 1
+            if bdim is not None:
+                s[bdim] = dp
+            if shape[head_dim] % mxn == 0:
+                s[head_dim] = mx
+            elif shape[seq_dim] % mxn == 0 and seq_dim != bdim:
+                s[seq_dim] = mx
+            if bdim is None and s[seq_dim] is None \
+                    and shape[seq_dim] % dpn == 0:
+                s[seq_dim] = dp
+        elif name in ("k", "v", "xk", "xv"):
+            seq_dim, head_dim = nd - 3, nd - 2
+            if bdim is not None:
+                s[bdim] = dp
+            if shape[head_dim] % mxn == 0:
+                s[head_dim] = mx
+            elif shape[seq_dim] % mxn == 0 and seq_dim != bdim:
+                s[seq_dim] = mx          # context parallel on the cache
+            if bdim is None and s[seq_dim] is None \
+                    and shape[seq_dim] % dpn == 0:
+                s[seq_dim] = dp          # B=1 long-context: seq over data
+        elif name in ("c_kv", "k_r"):
+            seq_dim, feat = nd - 2, nd - 1
+            if bdim is not None:
+                s[bdim] = dp
+            if OPTIONS["mla_cache"] == "seq":
+                if shape[seq_dim] % mxn == 0 and seq_dim != bdim:
+                    s[seq_dim] = mx
+                elif bdim is None and shape[seq_dim] % dpn == 0:
+                    s[seq_dim] = dp
+            else:   # "lora" baseline
+                if name == "c_kv" and shape[feat] % mxn == 0:
+                    s[feat] = mx
+                if bdim is None and shape[seq_dim] % dpn == 0:
+                    s[seq_dim] = dp
+        else:   # recurrent states: shard batch only
+            if bdim is not None:
+                s[bdim] = dp
+        return P(*s)
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def to_named(tree_specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

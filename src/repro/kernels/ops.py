@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) the kernels run in interpret mode (the kernel
+body executes in Python — numerics identical to TPU lowering at f32
+accumulation). ``repro.kernels.ops.INTERPRET`` flips to False on real
+TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gqa_decode import gqa_decode as _gqa_pallas
+from repro.kernels.textrank import textrank_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def gqa_decode(q, k_cache, v_cache, valid, block_s: int = 512):
+    """Flash-decode attention; see kernels/gqa_decode.py."""
+    return _gqa_pallas(q, k_cache, v_cache, valid, block_s=block_s,
+                       interpret=INTERPRET)
+
+
+def textrank_scores(sim: np.ndarray, damping: float = 0.85,
+                    iters: int = 30) -> np.ndarray:
+    """Drop-in replacement for compression.textrank_scores_np: pads the
+    similarity matrix to 128 alignment and runs the on-chip power
+    iteration."""
+    n = sim.shape[0]
+    if n == 0:
+        return np.zeros(0)
+    n_pad = max(128, ((n + 127) // 128) * 128)
+    padded = jnp.zeros((n_pad, n_pad), jnp.float32)
+    padded = padded.at[:n, :n].set(jnp.asarray(sim, jnp.float32))
+    p = textrank_pallas(padded, jnp.int32(n), damping=damping, iters=iters,
+                        interpret=INTERPRET)
+    return np.asarray(p[:n])

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q, k_cache, v_cache, valid):
+    """q: (B,H,hd); caches (B,S,Hkv,hd); valid (B,S). -> (B, H*hd)."""
+    b, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    qpk = h // hkv
+    qg = q.reshape(b, hkv, qpk, hd).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bgqd,bsgd->bgqs", qg, k) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqs,bsgd->bgqd", w, v)
+    return o.reshape(b, h * hd).astype(q.dtype)
+
+
+def textrank_ref(sim, damping: float = 0.85, iters: int = 30):
+    """sim: (N, N) unpadded similarity matrix. -> (N,) PageRank."""
+    n = sim.shape[0]
+    w = sim.astype(jnp.float32) * (1.0 - jnp.eye(n))
+    colsum = w.sum(axis=0)
+    colsum = jnp.where(colsum <= 0.0, 1.0, colsum)
+    wn = w / colsum[None, :]
+    p = jnp.full((n,), 1.0 / n)
+    for _ in range(iters):
+        p = (1.0 - damping) / n + damping * (wn @ p)
+    return p

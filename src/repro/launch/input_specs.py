@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+no-allocation inputs (weak-type-correct, shardable).
+
+``input_specs(cfg, shape)`` returns the kwargs pytree for the step
+function selected by the shape's kind:
+  train   -> {params, opt_state, batch{tokens, labels}}
+  prefill -> {params, batch{tokens[, frontend]}}
+  decode  -> {params, token, cache, pos}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.training.optimizer import init_adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          SDS((2,), jnp.uint32))
+
+
+def abstract_opt(cfg: ModelConfig, params_shapes):
+    return jax.eval_shape(init_adamw, params_shapes)
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k on a full-attention arch runs the sliding-window
+    variant (DESIGN.md §4): window 8192 unless the arch has one."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid") \
+            and cfg.attention_window == 0:
+        return dataclasses.replace(cfg, attention_window=8192)
+    return cfg
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, train: bool) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if train:
+        batch["labels"] = SDS((b, s), jnp.int32)
+    if cfg.frontend_tokens:
+        batch["frontend"] = SDS((b, cfg.frontend_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_structs(cfg: ModelConfig, shape: InputShape) -> Tuple:
+    """(token, cache, pos) for a serve_step at context length seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, s,
+                             frontend_len=cfg.frontend_tokens or None))
+    token = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return token, cache, pos
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    cfg = effective_config(cfg, shape)
+    params = abstract_params(cfg)
+    if shape.kind == "train":
+        return {"params": params,
+                "opt_state": abstract_opt(cfg, params),
+                "batch": batch_struct(cfg, shape, train=True)}
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": batch_struct(cfg, shape, train=False)}
+    token, cache, pos = decode_structs(cfg, shape)
+    return {"params": params, "token": token, "cache": cache, "pos": pos}

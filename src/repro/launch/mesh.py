@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+Single pod : (16, 16)    -> ("data", "model")      256 chips
+Multi-pod  : (2, 16, 16) -> ("pod", "data", "model") 512 chips
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; tests and benches see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(model: int = 1):
+    """A tiny mesh on whatever devices exist (CPU tests)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

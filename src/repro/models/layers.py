@@ -1,0 +1,355 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Params are nested dicts of jnp arrays; layer stacks are stored with a
+leading layer axis and executed with jax.lax.scan so compile time is
+independent of depth. Attention supports full-causal, sliding-window,
+GQA, QKV bias, cross-attention, and single-token decode against a KV
+cache (contiguous or ring-buffer for windows).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30  # large-negative mask value (bf16-safe)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32)
+            * std).astype(dtype)
+
+
+def stack_init(key, n: int, init_fn):
+    """Initialize ``n`` layers with split keys and stack along axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, gamma, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * gamma
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                     # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP
+# ---------------------------------------------------------------------------
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[2], d_ff, cfg.d_model, dtype)}
+    if cfg.activation == "squared_relu":     # no gate branch (nemotron)
+        p["up"] = dense_init(ks[0], cfg.d_model, d_ff, dtype)
+    else:
+        p["up"] = dense_init(ks[0], cfg.d_model, d_ff, dtype)
+        p["gate"] = dense_init(ks[1], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, cfg: ModelConfig, x):
+    act = activation_fn(cfg.activation)
+    h = x @ p["up"]
+    if "gate" in p:
+        h = act(x @ p["gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype, scale=0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, x_kv):
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], cfg.num_heads, hd)
+    k = k.reshape(*x_kv.shape[:-1], cfg.num_kv_heads, hd)
+    v = v.reshape(*x_kv.shape[:-1], cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, q_per_kv: int):
+    """q: (B,S,H,hd); k,v: (B,T,Hkv,hd); mask: (B|1, S, T) bool or None."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    q = q.reshape(b, s, hkv, q_per_kv, hd)
+    scores = jnp.einsum("bsgqd,btgd->bgqst", q, k) / math.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgqst,btgd->bsgqd", w, v)
+    return out.reshape(b, s, h * hd)
+
+
+def causal_mask(s: int, t: int, window: int = 0, offset: int = 0):
+    """(s, t) boolean mask; query i attends key j iff j <= i+offset and,
+    with a window, i+offset - j < window."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= (qi - kj) < window
+    return m
+
+
+# Block-causal "flash" prefill: above this sequence length, causal
+# self-attention runs chunked with online softmax, touching only the
+# lower-triangle (i >= j) chunk pairs — ~2x fewer attention FLOPs/bytes
+# and no (B,H,S,S) f32 score materialization (§Perf pair D). The
+# chunked path uses a dynamic-bound fori_loop, which is not
+# reverse-differentiable — training shapes (S=4096) stay below the
+# threshold; prefill/serving paths are forward-only.
+FLASH_MIN_SEQ = 8192
+FLASH_CHUNK = 2048
+
+
+def attention(p: Params, cfg: ModelConfig, x, positions=None,
+              window: Optional[int] = None):
+    """Full (or sliding-window) causal self-attention over a sequence."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, cfg, x, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.attention_window if window is None else window
+    if s >= FLASH_MIN_SEQ and s % FLASH_CHUNK == 0:
+        out = _flash_causal(q, k, v, cfg.q_per_kv, w)
+    else:
+        mask = causal_mask(s, s, w)[None]
+        out = _sdpa(q, k, v, mask, cfg.q_per_kv)
+    return out @ p["wo"]
+
+
+def _flash_causal(q, k, v, q_per_kv: int, window: int = 0,
+                  chunk: int = 0):
+    """Chunked causal attention with online softmax.
+
+    q/k/v: (B, S, H|Hkv, hd). Outer scan over query chunks; inner
+    dynamic-bound fori_loop over only the key chunks each query chunk
+    can see (block-lower-triangle, window-clipped)."""
+    b, s, h, hd = q.shape
+    chunk = chunk or min(FLASH_CHUNK, s)   # module var read at call time
+    hkv = k.shape[2]
+    hd_v = v.shape[-1]
+    qpk = q_per_kv
+    assert s % chunk == 0, (s, chunk)
+    nq = s // chunk
+    qg = q.reshape(b, s, hkv, qpk, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, 1)
+        m0 = jnp.full((b, hkv, qpk, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, qpk, chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, qpk, chunk, hd_v), jnp.float32)
+
+        def kv_body(j, state):
+            m, l, acc = state
+            kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+            sco = jnp.einsum("bqgpd,bkgd->bgpqk", qi, kj) * scale
+            sco = sco.astype(jnp.float32)
+            qpos = i * chunk + jnp.arange(chunk)
+            kpos = j * chunk + jnp.arange(chunk)
+            valid = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                valid &= (qpos[:, None] - kpos[None, :]) < window
+            sco = jnp.where(valid[None, None, None], sco, NEG_INF)
+            m_new = jnp.maximum(m, sco.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pij = jnp.exp(sco - m_new[..., None])
+            l_new = l * alpha + pij.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgpqk,bkgd->bgpqd", pij.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return m_new, l_new, acc_new
+
+        lo = jnp.maximum(0, (i * chunk - window) // chunk) if window > 0 \
+            else 0
+        m, l, acc = jax.lax.fori_loop(lo, i + 1, kv_body, (m0, l0, a0))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b, hkv, qpk, chunk, hd_v) -> (b, chunk, h*hd_v)
+        out_i = jnp.moveaxis(out_i, 3, 1).reshape(b, chunk, h * hd_v)
+        return None, out_i.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # (nq, b, chunk, h*hd_v) -> (b, s, h*hd_v)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h * hd_v)
+
+
+def cross_attention(p: Params, cfg: ModelConfig, x, memory):
+    """Encoder-decoder / VLM cross-attention (no rope, no mask)."""
+    q, k, v = _qkv(p, cfg, x, memory)
+    out = _sdpa(q, k, v, None, cfg.q_per_kv)
+    return out @ p["wo"]
+
+
+# -- decode path ------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int,
+                  dtype=None) -> Params:
+    """Contiguous KV cache; for windowed attention ``max_seq`` should be
+    the window size (ring buffer). With cfg.kv_cache_dtype == "int8"
+    the cache halves: int8 values + per-(seq, head) bf16 scales."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, dtype),
+                "v_scale": jnp.zeros(sshape, dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def quantize_kv(x):
+    """x: (..., hd) -> (int8 values, scales (...,))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(x.dtype)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(scale.dtype) * scale[..., None]
+
+
+def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
+                     window: int = 0, decode_impl: str = "xla"):
+    """Single-token decode. x: (B,1,D); kv: cache dict with "k"/"v"
+    (B,S,Hkv,hd) and optional int8 "k_scale"/"v_scale"; pos: (B,) or
+    scalar absolute position of the new token. Returns (out, new_kv)."""
+    b = x.shape[0]
+    k_cache, v_cache = kv["k"], kv["v"]
+    quant = "k_scale" in kv
+    s_max = k_cache.shape[1]
+    pos = jnp.asarray(pos)
+    uniform = pos.ndim == 0   # all sequences at the same position: O(1) write
+    if uniform:
+        pos = jnp.broadcast_to(pos, (b,))
+    q, k, v = _qkv(p, cfg, x, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % s_max if window > 0 else pos
+    new_kv = dict(kv)
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        if uniform:
+            dus = jax.lax.dynamic_update_slice_in_dim
+            new_kv["k"] = dus(k_cache, kq, slot[0], 1)
+            new_kv["v"] = dus(v_cache, vq, slot[0], 1)
+            new_kv["k_scale"] = dus(kv["k_scale"], ks, slot[0], 1)
+            new_kv["v_scale"] = dus(kv["v_scale"], vs, slot[0], 1)
+        else:
+            new_kv["k"] = _scatter_slot(k_cache, kq[:, 0], slot)
+            new_kv["v"] = _scatter_slot(v_cache, vq[:, 0], slot)
+            new_kv["k_scale"] = _scatter_scalar(kv["k_scale"], ks[:, 0], slot)
+            new_kv["v_scale"] = _scatter_scalar(kv["v_scale"], vs[:, 0], slot)
+        k_cache = dequantize_kv(new_kv["k"], new_kv["k_scale"])
+        v_cache = dequantize_kv(new_kv["v"], new_kv["v_scale"])
+    elif uniform:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot[0], 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot[0], 1)
+        new_kv["k"], new_kv["v"] = k_cache, v_cache
+    else:
+        k_cache = _scatter_slot(k_cache, k[:, 0], slot)
+        v_cache = _scatter_slot(v_cache, v[:, 0], slot)
+        new_kv["k"], new_kv["v"] = k_cache, v_cache
+    # validity: absolute position of cache entry j
+    j = jnp.arange(s_max)[None, :]
+    if window > 0:
+        age = (slot[:, None] - j) % s_max
+        valid = (age < jnp.minimum(pos[:, None] + 1, window))
+    else:
+        valid = j <= pos[:, None]
+    if decode_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.gqa_decode(q[:, 0], k_cache, v_cache, valid)
+        out = out.reshape(b, 1, -1)
+    else:
+        out = _sdpa(q, k_cache, v_cache, valid[:, None, :], cfg.q_per_kv)
+    return out @ p["wo"], new_kv
+
+
+def _scatter_scalar(cache, new, slot):
+    """cache: (B,S,H); new: (B,H); slot: (B,)."""
+    onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
+    return cache * (1 - onehot)[:, :, None] + onehot[:, :, None] * new[:, None]
+
+
+def _scatter_slot(cache, new, slot):
+    """cache: (B,S,H,hd); new: (B,H,hd); slot: (B,) -> write per batch."""
+    b = cache.shape[0]
+    onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
+    return cache * (1 - onehot)[:, :, None, None] + \
+        onehot[:, :, None, None] * new[:, None]

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+The KV cache stores only the compressed latent c_kv (kv_lora_rank) plus
+the shared rope key (rope_head_dim) per token — 576 floats/token/layer
+instead of 2*128*128 = 32768 for full MHA. Prefill runs the
+non-absorbed form; decode runs the *absorbed* form (q projected into
+latent space, attention performed against the latent cache directly),
+which is the TPU-native way to keep decode compute O(lora) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (FLASH_CHUNK, NEG_INF, _flash_causal,
+                                 apply_rope, causal_mask, dense_init,
+                                 rmsnorm)
+from repro.models import layers as _L
+
+
+def init_mla(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, h * (m.nope_head_dim + m.rope_head_dim), dtype),
+        "wdkv": dense_init(ks[1], d, m.kv_lora_rank, dtype),
+        "wkr": dense_init(ks[2], d, m.rope_head_dim, dtype),
+        "wuk": dense_init(ks[3], m.kv_lora_rank, h * m.nope_head_dim, dtype),
+        "wuv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d, dtype, scale=0.5),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+    }
+
+
+def _project_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = (x @ p["wq"]).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p: Dict, cfg: ModelConfig, x, positions=None):
+    """Prefill / training path (non-absorbed)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,S,lora)
+    k_r = apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                     cfg.rope_theta)[:, :, 0]                   # (B,S,rope)
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, m.nope_head_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    if s >= _L.FLASH_MIN_SEQ and s % FLASH_CHUNK == 0:
+        # block-causal flash path (§Perf pair D): fold the shared rope
+        # key into per-head concat dims so one kernel handles both terms
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_r[:, :, None, :],
+                                      (b, s, h, m.rope_head_dim))], axis=-1)
+        out = _flash_causal(q_cat, k_cat, v, 1, cfg.attention_window)
+        return out @ p["wo"], c_kv, k_r
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_r)) * scale
+    mask = causal_mask(s, s, cfg.attention_window)
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(b, s, -1)
+    return out @ p["wo"], c_kv, k_r
+
+
+def init_mla_cache(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int,
+                   dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((n_layers, batch, max_seq, m.kv_lora_rank), dtype),
+        "k_r": jnp.zeros((n_layers, batch, max_seq, m.rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: Dict, cfg: ModelConfig, x, ckv_cache, kr_cache, pos,
+               window: int = 0):
+    """Absorbed decode. x: (B,1,D); caches (B,S,lora)/(B,S,rope);
+    pos: scalar (uniform batch position) or (B,) vector. With
+    ``window`` > 0 the caches are ring buffers of size min(S, window).
+    Returns (out, caches)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    s_max = ckv_cache.shape[1]
+    pos = jnp.asarray(pos)
+    uniform = pos.ndim == 0
+    pos_b = jnp.broadcast_to(pos, (b,)) if uniform else pos
+    slot = pos % s_max if window > 0 else pos
+    slot_b = pos_b % s_max if window > 0 else pos_b
+    q_nope, q_rope = _project_q(p, cfg, x, pos_b[:, None])
+    c_kv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,1,lora)
+    k_r = apply_rope((x @ p["wkr"])[:, :, None, :], pos_b[:, None],
+                     cfg.rope_theta)[:, :, 0]                   # (B,1,rope)
+    if uniform:
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, c_kv,
+                                                        slot, 1)
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, k_r, slot, 1)
+    else:       # ragged per-sequence positions (continuous batching)
+        onehot = jax.nn.one_hot(slot_b, s_max, dtype=ckv_cache.dtype)
+        ckv_cache = ckv_cache * (1 - onehot)[:, :, None] \
+            + onehot[:, :, None] * c_kv
+        kr_cache = kr_cache * (1 - onehot)[:, :, None] \
+            + onehot[:, :, None] * k_r
+    # absorb: q_nope (B,1,H,nope) @ wuk (lora, H*nope) -> latent-space query
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wuk)           # (B,1,H,lora)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, ckv_cache)
+              + jnp.einsum("bshd,btd->bhst", q_rope, kr_cache)) * scale
+    j = jnp.arange(s_max)[None, :]
+    if window > 0:
+        age = (slot_b[:, None] - j) % s_max
+        valid = age < jnp.minimum(pos_b[:, None] + 1, window)
+    else:
+        valid = j <= pos_b[:, None]                              # (B,S)
+    scores = jnp.where(valid[:, None, None], scores.astype(jnp.float32),
+                       NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btl->bshl", w, ckv_cache)            # (B,1,H,lora)
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshl,lhd->bshd", ctx, wuv).reshape(b, 1, -1)
+    return out @ p["wo"], ckv_cache, kr_cache

@@ -1,0 +1,744 @@
+"""Model assembly for all assigned architecture families.
+
+Every family exposes the same functional API:
+
+  init_params(cfg, key)                          -> params
+  forward(params, cfg, batch)                    -> logits (B,S,V)
+  init_cache(cfg, batch_size, cache_len)         -> cache
+  prefill(params, cfg, batch, cache)             -> (last_logits, cache)
+  decode_step(params, cfg, token, cache, pos)    -> (logits, cache)
+
+Layer stacks are executed with jax.lax.scan over stacked params so the
+lowered HLO is depth-independent (critical for the 96-layer dry-runs).
+Heterogeneous stacks (VLM cross-attn every Nth layer, xLSTM block
+patterns, Zamba2's weight-shared attention block) are expressed as an
+outer scan over repeating groups.
+
+``batch`` dict keys: "tokens" (B,S) int32; optional "frontend"
+(B,F,D) precomputed modality embeddings (audio frames / vision patches
+— the stubbed frontend, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, ENCDEC, HYBRID, MOE, SSM, VLM,
+                                ModelConfig)
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE_MOD
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+# Scan unrolling toggle: the dry-run costing pass sets this to True so
+# XLA's cost_analysis (which counts a while-loop body ONCE, regardless
+# of trip count) sees the real per-layer work. Default 1 = rolled scan.
+SCAN_UNROLL = 1
+
+# Per-layer rematerialization: checkpoint every scan body (the standard
+# large-model policy — activation memory O(residual stream), one extra
+# forward of recompute). Enabled by training.train_step remat="layer";
+# §Perf iteration 2 (EXPERIMENTS.md): cuts nemotron-340b train temps
+# ~50x vs whole-forward remat.
+LAYER_REMAT = False
+
+# Sequence-parallel residual stream (Megatron-SP): between transformer
+# blocks the (B, S, D) residual is sharded along S over the model axis,
+# so per-layer remat saves 1/tp of the activations and XLA converts the
+# block all-reduces into reduce-scatter + all-gather pairs.
+# §Perf iteration 4. None = off (baseline).
+SEQUENCE_PARALLEL = None   # set to a ParallelContext to enable
+
+
+def _residual_constraint(x):
+    ctx = SEQUENCE_PARALLEL
+    if ctx is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if x.shape[1] % ctx.mesh.shape[ctx.model_axis]:
+        return x
+    spec = P(tuple(ctx.data_axes), ctx.model_axis, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def _scan(f, init, xs, length=None):
+    if LAYER_REMAT:
+        f = jax.checkpoint(f, prevent_cse=False)
+    return jax.lax.scan(f, init, xs, length=length, unroll=SCAN_UNROLL)
+
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _init_decoder_layer(cfg: ModelConfig, dtype):
+    def f(key):
+        ks = jax.random.split(key, 4)
+        p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+             "ln2": jnp.ones((cfg.d_model,), dtype)}
+        if cfg.mla is not None:
+            p["attn"] = MLA.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = L.init_attention(ks[0], cfg, dtype=dtype)
+        if cfg.moe is not None:
+            p["moe"] = MOE_MOD.init_moe(ks[1], cfg, dtype)
+        elif cfg.d_ff:
+            p["mlp"] = L.init_mlp(ks[1], cfg, dtype=dtype)
+        return p
+    return f
+
+
+def _init_cross_layer(cfg: ModelConfig, dtype):
+    def f(key):
+        ks = jax.random.split(key, 3)
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "xattn": L.init_attention(ks[0], cfg, cross=True, dtype=dtype),
+                "gate": jnp.zeros((), dtype),
+                "ln_mlp": jnp.ones((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(ks[1], cfg, dtype=dtype),
+                "gate_mlp": jnp.zeros((), dtype)}
+    return f
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                    dtype)
+    fam = cfg.family
+    if fam in (DENSE, MOE):
+        p["layers"] = L.stack_init(keys[2], cfg.num_layers,
+                                   _init_decoder_layer(cfg, dtype))
+    elif fam == VLM:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        p["layers"] = L.stack_init(keys[2], cfg.num_layers,
+                                   _init_decoder_layer(cfg, dtype))
+        p["layers"] = jax.tree.map(
+            lambda a: a.reshape(n_groups, cfg.cross_attn_every, *a.shape[1:]),
+            p["layers"])
+        p["cross"] = L.stack_init(keys[3], n_groups,
+                                  _init_cross_layer(cfg, dtype))
+    elif fam == ENCDEC:
+        enc_cfg = dataclasses.replace(cfg, moe=None)
+        p["encoder"] = L.stack_init(keys[2], cfg.encoder_layers,
+                                    _init_decoder_layer(enc_cfg, dtype))
+        p["enc_ln"] = jnp.ones((cfg.d_model,), dtype)
+
+        def dec_layer(key):
+            ks = jax.random.split(key, 2)
+            base = _init_decoder_layer(cfg, dtype)(ks[0])
+            base["lnx"] = jnp.ones((cfg.d_model,), dtype)
+            base["xattn"] = L.init_attention(ks[1], cfg, cross=True,
+                                             dtype=dtype)
+            return base
+        p["layers"] = L.stack_init(keys[3], cfg.num_layers, dec_layer)
+    elif fam == HYBRID:
+        every = cfg.ssm.shared_attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        p["layers"] = L.stack_init(
+            keys[2], cfg.num_layers,
+            lambda k: {"ln": jnp.ones((cfg.d_model,), dtype),
+                       "mamba": S.init_mamba2(k, cfg, dtype)})
+        p["layers"] = jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:])
+            if rem == 0 else a, p["layers"])
+        if rem:  # keep flat; group at runtime
+            pass
+        ks2 = jax.random.split(keys[3], 3)
+        p["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(ks2[0], cfg, dtype=dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.init_mlp(ks2[1], cfg, dtype=dtype)}
+    elif fam == SSM:
+        pattern = cfg.ssm.block_pattern or ("mlstm",)
+        n_groups = cfg.num_layers // len(pattern)
+        stacks = {}
+        sub = jax.random.split(keys[2], len(pattern))
+        for i, kind in enumerate(pattern):
+            init = (S.init_mlstm if kind == "mlstm" else S.init_slstm)
+            stacks[f"blk{i}_{kind}"] = L.stack_init(
+                sub[i], n_groups,
+                lambda k, init=init: {"ln": jnp.ones((cfg.d_model,), dtype),
+                                      "core": init(k, cfg, dtype)})
+        p["layers"] = stacks
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ===========================================================================
+# forward (training / teacher forcing)
+# ===========================================================================
+def _decoder_block(lp, cfg: ModelConfig, x, positions, parallel, window=None):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, _, _ = MLA.mla_attention(lp["attn"], cfg, h, positions)
+    else:
+        a = L.attention(lp["attn"], cfg, h, positions, window=window)
+    x = x + a
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        if parallel is None:
+            m, aux = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+        else:
+            m, aux = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h, parallel,
+                                               mode="a2a")
+        return x + m, aux["lb_loss"]
+    return x + L.mlp(lp["mlp"], cfg, h), jnp.float32(0.0)
+
+
+def _run_decoder_stack(stacked, cfg, x, positions, parallel, window=None):
+    def body(carry, lp):
+        x, lb = carry
+        x = _residual_constraint(x)
+        x, lb_i = _decoder_block(lp, cfg, x, positions, parallel, window)
+        return (x, lb + lb_i), None
+    (x, lb), _ = _scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, lb
+
+
+def _cross_block(cp, cfg, x, memory):
+    h = L.rmsnorm(x, cp["ln"], cfg.norm_eps)
+    x = x + jnp.tanh(cp["gate"]) * L.cross_attention(cp["xattn"], cfg, h,
+                                                     memory)
+    h = L.rmsnorm(x, cp["ln_mlp"], cfg.norm_eps)
+    return x + jnp.tanh(cp["gate_mlp"]) * L.mlp(cp["mlp"], cfg, h)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict,
+            parallel=None, window: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, aux_loss). Teacher-forcing full-sequence pass."""
+    tokens = batch["tokens"]
+    b, s_len = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+    lb = jnp.float32(0.0)
+    fam = cfg.family
+    w = cfg.attention_window if window is None else window
+
+    if fam in (DENSE, MOE):
+        x, lb = _run_decoder_stack(params["layers"], cfg, x, positions,
+                                   parallel, w)
+    elif fam == VLM:
+        memory = batch["frontend"]
+
+        def group(carry, lps):
+            x, lb = carry
+            x, lb_i = _run_decoder_stack(lps[0], cfg, x, positions,
+                                         parallel, w)
+            x = _cross_block(lps[1], cfg, x, memory)
+            return (x, lb + lb_i), None
+        (x, lb), _ = _scan(group, (x, lb),
+                                  (params["layers"], params["cross"]))
+    elif fam == ENCDEC:
+        enc = _encode(params, cfg, batch["frontend"], parallel)
+
+        def dec(carry, lp):
+            x, lb = carry
+            x = _residual_constraint(x)
+            x, lb_i = _decoder_block(lp, cfg, x, positions, parallel, w)
+            h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+            x = x + L.cross_attention(lp["xattn"], cfg, h, enc)
+            return (x, lb + lb_i), None
+        (x, lb), _ = _scan(dec, (x, lb), params["layers"])
+    elif fam == HYBRID:
+        x = _hybrid_forward(params, cfg, x, positions, w)
+    elif fam == SSM:
+        x = _ssm_forward(params, cfg, x)
+
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, lb
+
+
+def _encode(params, cfg, frontend, parallel):
+    b, f_len, _ = frontend.shape
+    pos = jnp.broadcast_to(jnp.arange(f_len), (b, f_len))
+    enc_cfg = dataclasses.replace(cfg, moe=None)
+
+    def body(x, lp):
+        x = _residual_constraint(x)
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        # bidirectional self-attention over frames
+        q, k, v = L._qkv(lp["attn"], enc_cfg, h, h)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        a = L._sdpa(q, k, v, None, enc_cfg.q_per_kv) @ lp["attn"]["wo"]
+        x = x + a
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + L.mlp(lp["mlp"], enc_cfg, h), None
+    x, _ = _scan(body, frontend, params["encoder"])
+    return L.rmsnorm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def _shared_attn_block(sp, cfg, x, positions, window):
+    h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    x = x + L.attention(sp["attn"], cfg, h, positions, window=window)
+    h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp(sp["mlp"], cfg, h)
+
+
+def _hybrid_forward(params, cfg, x, positions, window):
+    every = cfg.ssm.shared_attn_every
+    n_groups, rem = divmod(cfg.num_layers, every)
+    sp = params["shared_attn"]
+
+    def mamba_layer(x, lp):
+        x = _residual_constraint(x)
+        h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, _ = S.mamba2_forward(lp["mamba"], cfg, h)
+        return x + y, None
+
+    if rem == 0:
+        def group(x, lps):
+            x, _ = _scan(mamba_layer, x, lps)
+            return _shared_attn_block(sp, cfg, x, positions, window), None
+        x, _ = _scan(group, x, params["layers"])
+    else:
+        # params kept flat: run groups then remainder
+        flat = params["layers"]
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * every].reshape(n_groups, every,
+                                                    *a.shape[1:]), flat)
+        tail = jax.tree.map(lambda a: a[n_groups * every:], flat)
+
+        def group(x, lps):
+            x, _ = _scan(mamba_layer, x, lps)
+            return _shared_attn_block(sp, cfg, x, positions, window), None
+        x, _ = _scan(group, x, grouped)
+        x, _ = _scan(mamba_layer, x, tail)
+    return x
+
+
+def _ssm_forward(params, cfg, x):
+    pattern = cfg.ssm.block_pattern or ("mlstm",)
+
+    def group(x, lps):
+        x = _residual_constraint(x)
+        for i, kind in enumerate(pattern):
+            lp = lps[f"blk{i}_{kind}"]
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            fwd = S.mlstm_forward if kind == "mlstm" else S.slstm_forward
+            y, _ = fwd(lp["core"], cfg, h)
+            x = x + y
+        return x, None
+    x, _ = _scan(group, x, params["layers"])
+    return x
+
+
+# ===========================================================================
+# decode path (serve_step)
+# ===========================================================================
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               frontend_len: Optional[int] = None) -> Params:
+    """cache_len: max context (or window size for windowed attention)."""
+    dtype = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    eff_len = min(cache_len, cfg.attention_window) \
+        if cfg.attention_window else cache_len
+    cache: Params = {}
+    if fam in (DENSE, MOE):
+        if cfg.mla is not None:
+            cache["kv"] = MLA.init_mla_cache(cfg, cfg.num_layers, batch,
+                                             eff_len, dtype)
+        else:
+            cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch,
+                                          eff_len, dtype)
+    elif fam == VLM:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch, eff_len,
+                                      dtype)
+        cache["kv"] = jax.tree.map(
+            lambda a: a.reshape(n_groups, cfg.cross_attn_every, *a.shape[1:]),
+            cache["kv"])
+        f = frontend_len or cfg.frontend_tokens
+        hd = cfg.resolved_head_dim
+        cache["xk"] = jnp.zeros((n_groups, batch, f, cfg.num_kv_heads, hd),
+                                dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    elif fam == ENCDEC:
+        cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch, eff_len,
+                                      dtype)
+        f = frontend_len or cfg.frontend_tokens
+        hd = cfg.resolved_head_dim
+        cache["xk"] = jnp.zeros((cfg.num_layers, batch, f, cfg.num_kv_heads,
+                                 hd), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    elif fam == HYBRID:
+        every = cfg.ssm.shared_attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        st = S.init_mamba2_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape
+                                       ).copy() if rem == 0 else
+            jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), st)
+        n_attn = n_groups if rem == 0 else n_groups + (1 if rem else 0)
+        hd = cfg.resolved_head_dim
+        cache["kv"] = {
+            "k": jnp.zeros((n_groups, batch, eff_len, cfg.num_kv_heads, hd),
+                           dtype),
+            "v": jnp.zeros((n_groups, batch, eff_len, cfg.num_kv_heads, hd),
+                           dtype)}
+    elif fam == SSM:
+        pattern = cfg.ssm.block_pattern or ("mlstm",)
+        n_groups = cfg.num_layers // len(pattern)
+        stacks = {}
+        for i, kind in enumerate(pattern):
+            st = (S.init_mlstm_state if kind == "mlstm"
+                  else S.init_slstm_state)(cfg, batch)
+            stacks[f"blk{i}_{kind}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(),
+                st)
+        cache["ssm"] = stacks
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict,
+            parallel=None, window: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Full-prompt prefill; returns (last-token logits, filled cache).
+
+    For attention families the caches are rebuilt from the hidden states
+    (recomputing K/V — one extra matmul per layer, which keeps the scan
+    carry small); recurrent families return their final states.
+    """
+    tokens = batch["tokens"]
+    b, s_len = tokens.shape
+    cache = init_cache(cfg, b, batch.get("cache_len", s_len),
+                       frontend_len=(batch["frontend"].shape[1]
+                                     if "frontend" in batch else None))
+    x, cache = _fill_cache(params, cfg, batch, cache, parallel, window)
+    x = L.rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, 0], cache
+
+
+def _fill_cache(params, cfg, batch, cache, parallel, window):
+    """Re-run the stack storing K/V into the decode cache layout."""
+    # NOTE: used by tests/examples at small scale; the dry-run decode
+    # shapes start from a pre-filled cache via ShapeDtypeStruct.
+    tokens = batch["tokens"]
+    b, s_len = tokens.shape
+    fam = cfg.family
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+    w = cfg.attention_window if window is None else window
+    eff = cache["kv"]["k"].shape[-3] if "kv" in cache and "k" in cache["kv"] \
+        else s_len
+
+    def store_kv(lp, x):
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], cfg, h, h)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        v = v
+        if eff < s_len:   # windowed ring buffer: keep last ``eff`` entries
+            k, v = k[:, -eff:], v[:, -eff:]
+            # ring layout: entry for absolute pos p sits at p % eff
+            roll = (s_len % eff)
+            k = jnp.roll(k, roll, axis=1)
+            v = jnp.roll(v, roll, axis=1)
+            return k, v
+        pad = eff - s_len
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return k, v
+
+    def pack_kv(k, v):
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = L.quantize_kv(k)
+            vq, vs = L.quantize_kv(v)
+            return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return {"k": k, "v": v}
+
+    if fam in (DENSE, MOE) and cfg.mla is None:
+        def body(x, lp):
+            k, v = store_kv(lp, x)
+            x, _ = _decoder_block(lp, cfg, x, positions, parallel, w)
+            return x, pack_kv(k, v)
+        x, kv = _scan(body, x, params["layers"])
+        cache["kv"] = kv
+    elif fam in (DENSE, MOE):
+        def body(x, lp):
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, c_kv, k_r = MLA.mla_attention(lp["attn"], cfg, h, positions)
+            pad = cache["kv"]["c_kv"].shape[2] - s_len
+            c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+            k_r = jnp.pad(k_r, ((0, 0), (0, pad), (0, 0)))
+            x = x + a
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                if parallel is None:
+                    m, _ = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+                else:
+                    m, _ = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h,
+                                                     parallel, mode="a2a")
+                x = x + m
+            else:
+                x = x + L.mlp(lp["mlp"], cfg, h)
+            return x, {"c_kv": c_kv, "k_r": k_r}
+        x, kv = _scan(body, x, params["layers"])
+        cache["kv"] = kv
+    elif fam == VLM:
+        memory = batch["frontend"]
+
+        def group(x, lps):
+            lp, cp = lps
+
+            def inner(x, ilp):
+                k, v = store_kv(ilp, x)
+                x, _ = _decoder_block(ilp, cfg, x, positions, parallel, w)
+                return x, {"k": k, "v": v}
+            x, kv = _scan(inner, x, lp)
+            h = L.rmsnorm(x, cp["ln"], cfg.norm_eps)
+            _, xk, xv = L._qkv(cp["xattn"], cfg, h, memory)
+            x = _cross_block(cp, cfg, x, memory)
+            return x, (kv, xk, xv)
+        x, (kv, xk, xv) = _scan(group, x,
+                                       (params["layers"], params["cross"]))
+        cache["kv"], cache["xk"], cache["xv"] = kv, xk, xv
+    elif fam == ENCDEC:
+        enc = _encode(params, cfg, batch["frontend"], parallel)
+
+        def body(x, lp):
+            k, v = store_kv(lp, x)
+            x, _ = _decoder_block(lp, cfg, x, positions, parallel, w)
+            h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+            _, xk, xv = L._qkv(lp["xattn"], cfg, h, enc)
+            x = x + L.cross_attention(lp["xattn"], cfg, h, enc)
+            return x, ({"k": k, "v": v}, xk, xv)
+        x, (kv, xk, xv) = _scan(body, x, params["layers"])
+        cache["kv"], cache["xk"], cache["xv"] = kv, xk, xv
+    elif fam == HYBRID:
+        x, cache = _hybrid_fill(params, cfg, x, positions, cache, w)
+    elif fam == SSM:
+        x, cache = _ssm_fill(params, cfg, x, cache)
+    return x, cache
+
+
+def _hybrid_fill(params, cfg, x, positions, cache, w):
+    every = cfg.ssm.shared_attn_every
+    n_groups, rem = divmod(cfg.num_layers, every)
+    assert rem == 0 or True
+    sp = params["shared_attn"]
+    b, s_len = x.shape[0], x.shape[1]
+    eff = cache["kv"]["k"].shape[2]
+
+    def mamba_layer(x, lp):
+        h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, hf = S.mamba2_forward(lp["mamba"], cfg, h)
+        # conv state: last 3 pre-conv features
+        z, xbc, dt = S._split_proj(lp["mamba"], cfg, h)
+        conv_state = xbc[:, -3:]
+        return x + y, {"h": hf, "conv": conv_state}
+
+    def group(x, lps):
+        x, st = _scan(mamba_layer, x, lps)
+        h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(sp["attn"], cfg, h, h)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        pad = eff - s_len
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = _shared_attn_block(sp, cfg, x, positions, w)
+        return x, (st, {"k": k, "v": v})
+
+    if rem == 0:
+        x, (st, kv) = _scan(group, x, params["layers"])
+        cache["ssm"], cache["kv"] = st, kv
+    else:
+        flat = params["layers"]
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * every].reshape(n_groups, every,
+                                                    *a.shape[1:]), flat)
+        tail = jax.tree.map(lambda a: a[n_groups * every:], flat)
+        x, (st, kv) = _scan(group, x, grouped)
+        x, st_tail = _scan(mamba_layer, x, tail)
+        cache["ssm"] = jax.tree.map(
+            lambda a, b_: jnp.concatenate([a.reshape(-1, *a.shape[2:]), b_]),
+            st, st_tail)
+        cache["kv"] = kv
+    return x, cache
+
+
+def _ssm_fill(params, cfg, x, cache):
+    pattern = cfg.ssm.block_pattern or ("mlstm",)
+
+    def group(x, lps):
+        states = {}
+        for i, kind in enumerate(pattern):
+            lp = lps[f"blk{i}_{kind}"]
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            fwd = S.mlstm_forward if kind == "mlstm" else S.slstm_forward
+            y, st = fwd(lp["core"], cfg, h)
+            states[f"blk{i}_{kind}"] = st
+            x = x + y
+        return x, states
+    x, states = _scan(group, x, params["layers"])
+    cache["ssm"] = states
+    return x, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, cache: Params,
+                pos, parallel=None,
+                window: Optional[int] = None,
+                decode_impl: str = "xla") -> Tuple[jnp.ndarray, Params]:
+    """token: (B,1) int32; pos: scalar int (uniform across batch).
+    Returns (logits (B,V), new cache)."""
+    b = token.shape[0]
+    x = params["embed"][token]
+    w = cfg.attention_window if window is None else window
+    fam = cfg.family
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def attn_decode(lp, x, kv):
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, ckv, kr = MLA.mla_decode(lp["attn"], cfg, h, kv["c_kv"],
+                                        kv["k_r"], pos, window=w or 0)
+            new = {"c_kv": ckv, "k_r": kr}
+        else:
+            a, new = L.decode_attention(lp["attn"], cfg, h, kv, pos,
+                                        window=w or 0,
+                                        decode_impl=decode_impl)
+        x = x + a
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            if parallel is None:
+                m, _ = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+            else:
+                m, _ = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h, parallel,
+                                                 mode="psum")
+            x = x + m
+        else:
+            x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, new
+
+    if fam in (DENSE, MOE):
+        def body(x, inp):
+            lp, kv = inp
+            return attn_decode(lp, x, kv)
+        x, kv = _scan(body, x, (params["layers"], cache["kv"]))
+        cache = dict(cache, kv=kv)
+    elif fam == VLM:
+        def group(x, inp):
+            lp, cp, kv, xk, xv = inp
+
+            def inner(x, ii):
+                ilp, ikv = ii
+                return attn_decode(ilp, x, ikv)
+            x, kv = _scan(inner, x, (lp, kv))
+            h = L.rmsnorm(x, cp["ln"], cfg.norm_eps)
+            q = (h @ cp["xattn"]["wq"]).reshape(b, 1, cfg.num_heads, -1)
+            a = L._sdpa(q, xk, xv, None, cfg.q_per_kv) @ cp["xattn"]["wo"]
+            x = x + jnp.tanh(cp["gate"]) * a
+            h = L.rmsnorm(x, cp["ln_mlp"], cfg.norm_eps)
+            x = x + jnp.tanh(cp["gate_mlp"]) * L.mlp(cp["mlp"], cfg, h)
+            return x, kv
+        x, kv = _scan(group, x, (params["layers"], params["cross"],
+                                        cache["kv"], cache["xk"],
+                                        cache["xv"]))
+        cache = dict(cache, kv=kv)
+    elif fam == ENCDEC:
+        def body(x, inp):
+            lp, kv, xk, xv = inp
+            x, new = attn_decode(lp, x, kv)
+            h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+            q = (h @ lp["xattn"]["wq"]).reshape(b, 1, cfg.num_heads, -1)
+            a = L._sdpa(q, xk, xv, None, cfg.q_per_kv) @ lp["xattn"]["wo"]
+            x = x + a
+            return x, new
+        x, kv = _scan(body, x, (params["layers"], cache["kv"],
+                                       cache["xk"], cache["xv"]))
+        cache = dict(cache, kv=kv)
+    elif fam == HYBRID:
+        x, cache = _hybrid_decode(params, cfg, x, cache, pos, w)
+    elif fam == SSM:
+        x, cache = _ssm_decode(params, cfg, x, cache)
+
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, 0], cache
+
+
+def _hybrid_decode(params, cfg, x, cache, pos, w):
+    every = cfg.ssm.shared_attn_every
+    n_groups, rem = divmod(cfg.num_layers, every)
+    sp = params["shared_attn"]
+
+    def mamba_layer(x, inp):
+        lp, st = inp
+        h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, st2 = S.mamba2_decode(lp["mamba"], cfg, h, st)
+        return x + y, st2
+
+    def group(x, inp):
+        lps, st, kv = inp
+        x, st2 = _scan(mamba_layer, x, (lps, st))
+        h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        a, kv2 = L.decode_attention(sp["attn"], cfg, h, kv, pos,
+                                    window=w or 0)
+        x = x + a
+        h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.mlp(sp["mlp"], cfg, h)
+        return x, (st2, kv2)
+
+    if rem == 0:
+        x, (st, kv) = _scan(group, x,
+                                   (params["layers"], cache["ssm"],
+                                    cache["kv"]))
+        cache = dict(cache, ssm=st, kv=kv)
+    else:
+        flat = params["layers"]
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * every].reshape(n_groups, every,
+                                                    *a.shape[1:]), flat)
+        tail = jax.tree.map(lambda a: a[n_groups * every:], flat)
+        st_flat = cache["ssm"]
+        st_g = jax.tree.map(
+            lambda a: a[: n_groups * every].reshape(n_groups, every,
+                                                    *a.shape[1:]), st_flat)
+        st_t = jax.tree.map(lambda a: a[n_groups * every:], st_flat)
+        x, (st2, kv) = _scan(group, x, (grouped, st_g, cache["kv"]))
+        x, st_t2 = _scan(mamba_layer, x, (tail, st_t))
+        st_new = jax.tree.map(
+            lambda a, b_: jnp.concatenate([a.reshape(-1, *a.shape[2:]), b_]),
+            st2, st_t2)
+        cache = dict(cache, ssm=st_new, kv=kv)
+    return x, cache
+
+
+def _ssm_decode(params, cfg, x, cache):
+    pattern = cfg.ssm.block_pattern or ("mlstm",)
+
+    def group(x, inp):
+        lps, sts = inp
+        new = {}
+        for i, kind in enumerate(pattern):
+            key = f"blk{i}_{kind}"
+            lp, st = lps[key], sts[key]
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            fn = S.mlstm_decode if kind == "mlstm" else S.slstm_decode
+            y, st2 = fn(lp["core"], cfg, h, st)
+            new[key] = st2
+            x = x + y
+        return x, new
+    x, st = _scan(group, x, (params["layers"], cache["ssm"]))
+    return x, dict(cache, ssm=st)

@@ -1,0 +1,324 @@
+"""Recurrent blocks: Mamba2 (SSD, chunked scan) and xLSTM (mLSTM +
+sLSTM), adapted for TPU (DESIGN.md §3): the sequence dimension is
+processed in VMEM-sized chunks with an inter-chunk lax.scan carrying
+the recurrent state, so prefill is parallel within chunks (MXU matmuls)
+and decode is a single O(1) state update.
+
+State conventions:
+  mamba2 : h (B, H, P, N)   H heads, P head channels, N = ssm state dim
+  mlstm  : (C (B,H,P,P), n (B,H,P))   matrix memory + normalizer
+  slstm  : (c (B,H,P), n (B,H,P), h (B,H,P))
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+HEAD_P = 64  # channels per recurrent head
+
+
+# ===========================================================================
+# Mamba2 (simplified SSD; single B/C group shared across heads)
+# ===========================================================================
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads, cfg.ssm.state_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_inner, n_heads, n = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * n + n_heads, dtype),
+        "out_proj": dense_init(ks[1], d_inner, d, dtype, scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "conv": (jax.random.normal(ks[2], (4, d_inner + 2 * n))
+                 * 0.1).astype(dtype),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, u):
+    d_inner, n_heads, n = mamba2_dims(cfg)
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv, state=None):
+    """Depthwise causal conv, kernel 4. xbc: (B,T,C); state: (B,3,C)."""
+    k = conv.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : k - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_forward(p: Dict, cfg: ModelConfig, u, h0=None):
+    """u: (B,T,D). Returns (y, h_final). Chunked SSD scan."""
+    b, t, _ = u.shape
+    d_inner, nh, n = mamba2_dims(cfg)
+    q = min(cfg.ssm.chunk_size, t)
+    assert t % q == 0, f"seq {t} not divisible by chunk {q}"
+    nc = t // q
+    z, xbc, dt = _split_proj(p, cfg, u)
+    xbc, _ = _causal_conv(xbc, p["conv"])
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    x = x.reshape(b, t, nh, HEAD_P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    da = dt * a                                                   # (B,T,H) <0
+
+    # chunk views
+    xc = x.reshape(b, nc, q, nh, HEAD_P)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dac = da.reshape(b, nc, q, nh)
+    dtc = dt.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(dac, axis=2)                                 # (B,nc,Q,H)
+
+    # intra-chunk (lower-triangular decay kernel)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: exp of the (positive) upper-triangle entries
+    # overflows and its grad poisons the backward pass with NaNs
+    li = jnp.where(tri[None, None, :, :, None], li, -jnp.inf)
+    decay = jnp.exp(li)
+    gbc = jnp.einsum("bcin,bcjn->bcij", cc, bc)[..., None]        # (B,nc,Q,Q,1)
+    kern = (gbc * decay * dtc[:, :, None, :, :]).astype(u.dtype)  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", kern, xc)
+
+    # chunk-final states
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                        # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                         bc, (seg * dtc).astype(u.dtype), xc)     # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    def step(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, HEAD_P, n), jnp.float32)
+    s_chunk_t = jnp.moveaxis(s_chunk, 1, 0).astype(jnp.float32)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    h_final, h_prevs = jax.lax.scan(step, h0, (s_chunk_t, dec_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                         # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc,
+                         h_prevs.astype(u.dtype)) \
+        * jnp.exp(cum).astype(u.dtype)[..., None]
+    y = (y_intra + y_inter).reshape(b, t, nh, HEAD_P)
+    y = y + x * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, d_inner) * jax.nn.silu(z)
+    return y @ p["out_proj"], h_final
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    _, nh, n = mamba2_dims(cfg)
+    return {"h": jnp.zeros((batch, nh, HEAD_P, n), jnp.float32),
+            "conv": jnp.zeros((batch, 3,
+                               cfg.ssm.expand * cfg.d_model
+                               + 2 * cfg.ssm.state_dim),
+                              jnp.dtype(cfg.dtype))}
+
+
+def mamba2_decode(p: Dict, cfg: ModelConfig, u, state):
+    """u: (B,1,D); O(1) recurrent update."""
+    b = u.shape[0]
+    d_inner, nh, n = mamba2_dims(cfg)
+    z, xbc, dt = _split_proj(p, cfg, u)
+    xbc, conv_state = _causal_conv(xbc, p["conv"], state["conv"])
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    x = x.reshape(b, nh, HEAD_P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)                                          # (B,H)
+    h = state["h"] * dec[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+        dt, x.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h)
+    y = y.astype(u.dtype) + x * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory, sequential)
+# ===========================================================================
+def xlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    n_heads = cfg.num_heads
+    return cfg.d_model // n_heads, n_heads   # (head dim, heads)
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_up = cfg.ssm.expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "up": dense_init(ks[0], d, 2 * d_up, dtype),
+        "wq": dense_init(ks[1], d_up, d_up, dtype),
+        "wk": dense_init(ks[2], d_up, d_up, dtype),
+        "wv": dense_init(ks[3], d_up, d_up, dtype),
+        "wif": dense_init(ks[4], d_up, 2 * cfg.num_heads, jnp.float32),
+        "down": dense_init(ks[5], d_up, d, dtype, scale=0.5),
+    }
+
+
+def _mlstm_heads(cfg, d_up):
+    nh = cfg.num_heads
+    return nh, d_up // nh
+
+
+def mlstm_forward(p: Dict, cfg: ModelConfig, u, state=None):
+    """Post-up-projection mLSTM; chunked linear-attention form with
+    per-head scalar forget decay. u: (B,T,D)."""
+    b, t, _ = u.shape
+    d_up = p["wq"].shape[0]
+    nh, hp = _mlstm_heads(cfg, d_up)
+    q_len = min(cfg.ssm.chunk_size, t)
+    assert t % q_len == 0
+    nc = t // q_len
+    xm, z = jnp.split(u @ p["up"], 2, axis=-1)
+    q = (xm @ p["wq"]).reshape(b, t, nh, hp) / math.sqrt(hp)
+    k = (xm @ p["wk"]).reshape(b, t, nh, hp)
+    v = (xm @ p["wv"]).reshape(b, t, nh, hp)
+    gates = xm.astype(jnp.float32) @ p["wif"]
+    i_g = jnp.exp(jnp.minimum(gates[..., :nh], 8.0))              # input gate
+    f_g = jax.nn.sigmoid(gates[..., nh:])                         # forget
+    logf = jnp.log(f_g + 1e-9)
+
+    qc = q.reshape(b, nc, q_len, nh, hp)
+    kc = k.reshape(b, nc, q_len, nh, hp)
+    vc = v.reshape(b, nc, q_len, nh, hp)
+    ic = i_g.reshape(b, nc, q_len, nh)
+    cum = jnp.cumsum(logf.reshape(b, nc, q_len, nh), axis=2)
+
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((q_len, q_len), bool))
+    li = jnp.where(tri[None, None, :, :, None], li, -jnp.inf)
+    decay = jnp.exp(li)
+    qk = jnp.einsum("bcihp,bcjhp->bcijh", qc, kc)
+    kern = (qk * decay * ic[:, :, None, :, :]).astype(u.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", kern, vc)
+
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)
+    s_chunk = jnp.einsum("bcqhp,bcqh,bcqhv->bchpv",
+                         kc, (seg * ic).astype(u.dtype), vc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(c, inp):
+        s_c, dec = inp
+        return c * dec[:, :, None, None] + s_c, c
+
+    c0 = state["c"] if state is not None else \
+        jnp.zeros((b, nh, hp, hp), jnp.float32)
+    h_final, c_prevs = jax.lax.scan(
+        step, c0, (jnp.moveaxis(s_chunk, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(chunk_decay, 1, 0)))
+    c_prevs = jnp.moveaxis(c_prevs, 0, 1)
+    y_inter = jnp.einsum("bcqhp,bchpv->bcqhv", qc,
+                         c_prevs.astype(u.dtype)) \
+        * jnp.exp(cum).astype(u.dtype)[..., None]
+    y = (y_intra + y_inter).reshape(b, t, d_up)
+    y = y * jax.nn.silu(z)
+    return y @ p["down"], {"c": h_final}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_up = cfg.ssm.expand * cfg.d_model
+    nh, hp = _mlstm_heads(cfg, d_up)
+    return {"c": jnp.zeros((batch, nh, hp, hp), jnp.float32)}
+
+
+def mlstm_decode(p: Dict, cfg: ModelConfig, u, state):
+    b = u.shape[0]
+    d_up = p["wq"].shape[0]
+    nh, hp = _mlstm_heads(cfg, d_up)
+    xm, z = jnp.split(u @ p["up"], 2, axis=-1)
+    q = (xm @ p["wq"]).reshape(b, nh, hp) / math.sqrt(hp)
+    k = (xm @ p["wk"]).reshape(b, nh, hp)
+    v = (xm @ p["wv"]).reshape(b, nh, hp)
+    gates = xm[:, 0].astype(jnp.float32) @ p["wif"]
+    i_g = jnp.exp(jnp.minimum(gates[:, :nh], 8.0))
+    f_g = jax.nn.sigmoid(gates[:, nh:])
+    c = state["c"] * f_g[:, :, None, None] + \
+        i_g[:, :, None, None] * jnp.einsum("bhp,bhv->bhpv",
+                                           k.astype(jnp.float32),
+                                           v.astype(jnp.float32))
+    y = jnp.einsum("bhp,bhpv->bhv", q.astype(jnp.float32), c)
+    y = y.reshape(b, 1, d_up).astype(u.dtype) * jax.nn.silu(z)
+    return y @ p["down"], {"c": c}
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hp = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates (i, f, z, o)
+        "wx": dense_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights per head: (H, hp, 4*hp)
+        "rh": (jax.random.normal(ks[1], (nh, hp, 4 * hp))
+               / math.sqrt(hp)).astype(jnp.float32),
+        "down": dense_init(ks[2], d, d, dtype, scale=0.5),
+    }
+
+
+def slstm_forward(p: Dict, cfg: ModelConfig, u, state=None):
+    """Strictly sequential sLSTM (lax.scan over time). u: (B,T,D)."""
+    b, t, d = u.shape
+    nh = cfg.num_heads
+    hp = d // nh
+    gx = (u @ p["wx"]).astype(jnp.float32)      # (B,T,4D)
+
+    def step(carry, g_t):
+        c, n, h = carry                          # each (B,H,hp)
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["rh"])   # (B,H,4hp)
+        g = g_t.reshape(b, nh, 4 * hp) + rec
+        i, f, zg, o = jnp.split(g, 4, axis=-1)
+        i = jnp.exp(jnp.minimum(i, 8.0))
+        f = jax.nn.sigmoid(f)
+        c = f * c + i * jnp.tanh(zg)
+        n = f * n + i
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (c, n, h), h
+
+    if state is None:
+        zeros = jnp.zeros((b, nh, hp), jnp.float32)
+        state = (zeros, zeros, zeros)
+    (c, n, h), hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(u.dtype)
+    return y @ p["down"], (c, n, h)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    nh = cfg.num_heads
+    hp = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hp), jnp.float32)
+    return (z, z, z)
+
+
+def slstm_decode(p: Dict, cfg: ModelConfig, u, state):
+    y, state = slstm_forward(p, cfg, u, state)
+    return y, state

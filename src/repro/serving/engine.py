@@ -1,0 +1,207 @@
+"""Continuous-batching inference engine (paper §3.1's service model,
+realized in JAX).
+
+One engine == one pool's GPU: ``n_max`` KV slots advance in lockstep;
+each ``step()`` is one iteration (one decode token for every active
+slot). Prefill is chunked at ``c_chunk`` tokens per iteration
+(Sarathi-style), matching E[S] = (ceil(L_in/C_chunk) + L_out) * t_iter.
+
+The engine is functional at the device boundary: all device state lives
+in ``self.cache`` (a pytree) and is updated by jit'd steps. Slot
+bookkeeping (which request occupies which slot) is host-side — exactly
+the split a production gateway/engine pair has.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    tokens: List[int]              # prompt token ids
+    max_new_tokens: int
+    category: str = "prose"
+
+
+@dataclasses.dataclass
+class ServeResult:
+    rid: int
+    output_tokens: List[int]
+    prefill_iters: int
+    decode_iters: int
+    queue_iters: int               # iterations spent waiting for a slot
+
+
+class InferenceEngine:
+    """One pool: n_max lockstep slots over a shared batched KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, n_max: int, c_max: int,
+                 c_chunk: int = 512, eos_id: Optional[int] = None,
+                 decode_impl: str = "xla"):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                "engine supports attention-family models (the paper serves "
+                "Llama-3-70B); SSM decode runs through models.decode_step")
+        self.cfg = cfg
+        self.params = params
+        self.n_max = n_max
+        self.c_max = c_max
+        self.c_chunk = c_chunk
+        self.eos_id = eos_id
+        self.cache = M.init_cache(cfg, n_max, c_max)
+        # per-slot host state
+        self.slot_req: List[Optional[ServeRequest]] = [None] * n_max
+        self.slot_pos = np.zeros(n_max, np.int32)        # next position
+        self.slot_prefill_left: List[List[int]] = [[] for _ in range(n_max)]
+        self.slot_out: List[List[int]] = [[] for _ in range(n_max)]
+        self.slot_last_tok = np.zeros(n_max, np.int32)
+        self.waiting: List[ServeRequest] = []
+        self.results: Dict[int, ServeResult] = {}
+        self.iteration = 0
+        self._queue_iters: Dict[int, int] = {}
+        self._enqueued_at: Dict[int, int] = {}
+        self._prefill_iters: Dict[int, int] = {}
+        self._decode = jax.jit(partial(self._decode_fn, decode_impl))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_fn,
+                                      static_argnames=("chunk_len",))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: ServeRequest) -> None:
+        self.waiting.append(req)
+        self._enqueued_at[req.rid] = self.iteration
+
+    def busy(self) -> bool:
+        return any(r is not None for r in self.slot_req) or bool(self.waiting)
+
+    def utilization_snapshot(self) -> float:
+        return sum(r is not None for r in self.slot_req) / self.n_max
+
+    def run_to_completion(self, max_iters: int = 100_000) -> Dict[int, ServeResult]:
+        while self.busy() and self.iteration < max_iters:
+            self.step()
+        return self.results
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> None:
+        """One lockstep iteration: admit, advance prefills (one chunk per
+        slot), then one batched decode for slots already past prefill."""
+        self.iteration += 1
+        self._admit()
+        decode_mask = np.zeros(self.n_max, bool)
+        for s in range(self.n_max):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            if self.slot_prefill_left[s]:
+                chunk = self.slot_prefill_left[s][: self.c_chunk]
+                self.slot_prefill_left[s] = \
+                    self.slot_prefill_left[s][self.c_chunk:]
+                self._run_prefill_chunk(s, chunk)
+                self._prefill_iters[req.rid] = \
+                    self._prefill_iters.get(req.rid, 0) + 1
+                if not self.slot_prefill_left[s]:
+                    self.slot_last_tok[s] = chunk[-1]
+            else:
+                decode_mask[s] = True
+        if decode_mask.any():
+            self._run_decode(decode_mask)
+
+    # ------------------------------------------------------------ internals
+    def _admit(self) -> None:
+        for s in range(self.n_max):
+            if self.slot_req[s] is None and self.waiting:
+                req = self.waiting.pop(0)
+                if len(req.tokens) + req.max_new_tokens > self.c_max:
+                    # gateway guarantees this never happens (Eq. 15); a
+                    # direct-submitted oversized request is refused.
+                    self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0)
+                    continue
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+                self.slot_prefill_left[s] = list(req.tokens)
+                self.slot_out[s] = []
+                self._queue_iters[req.rid] = \
+                    self.iteration - self._enqueued_at[req.rid]
+
+    def _prefill_chunk_fn(self, params, cache, tokens, slot, start_pos,
+                          chunk_len):
+        """Prefill ``chunk_len`` tokens of one slot (batch row ``slot``)."""
+        cfg = self.cfg
+        b = tokens.shape[0]           # == 1
+        x = params["embed"][tokens]
+        positions = start_pos + jnp.arange(chunk_len)[None]
+        # attend over cache (previous chunks) + this chunk causally:
+        # implemented by decoding the chunk through decode positions via
+        # a scan of single tokens would be slow; instead run windowed
+        # self-attention with explicit positions against the cache.
+        # Simpler correct approach: sequential single-token decode inside
+        # a scan (chunk_len is the C_chunk budget — one iteration's work).
+        def body(carry, t):
+            cache, x_last = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, 1)
+            logits, cache = M.decode_step(params, cfg, tok, cache,
+                                          start_pos + t)
+            return (cache, logits), None
+        (cache, logits), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((b, cfg.vocab_size), cfg.dtype)),
+            jnp.arange(chunk_len))
+        return cache, logits
+
+    def _run_prefill_chunk(self, s: int, chunk: List[int]) -> None:
+        # slice this slot's cache row, run the chunk, write it back
+        row = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+            a, s, 1, self._batch_axis(a)), self.cache)
+        toks = jnp.asarray(np.array(chunk, np.int32)[None])
+        row, _ = self._prefill_chunk(self.params, row, toks, s,
+                                     int(self.slot_pos[s]),
+                                     chunk_len=len(chunk))
+        self.cache = jax.tree.map(
+            lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+                full, r, s, self._batch_axis(full)), self.cache, row)
+        self.slot_pos[s] += len(chunk)
+
+    def _batch_axis(self, leaf) -> int:
+        # dense kv caches (L,B,S,H,hd) + int8 scales (L,B,S,H) -> 1;
+        # VLM grouped kv (G,E,B,S,H,hd) -> 2; anything else -> 0
+        if leaf.ndim in (4, 5):
+            return 1
+        if leaf.ndim == 6:
+            return 2
+        return 0
+
+    def _decode_fn(self, decode_impl, params, cache, tokens, pos):
+        logits, cache = M.decode_step(params, self.cfg, tokens, cache, pos,
+                                      decode_impl=decode_impl)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _run_decode(self, mask: np.ndarray) -> None:
+        toks = jnp.asarray(self.slot_last_tok[:, None])
+        pos = jnp.asarray(self.slot_pos)
+        next_tok, self.cache = self._decode(self.params, self.cache,
+                                            toks, pos)
+        next_tok = np.asarray(next_tok)
+        for s in np.where(mask)[0]:
+            req = self.slot_req[s]
+            self.slot_out[s].append(int(next_tok[s]))
+            self.slot_last_tok[s] = next_tok[s]
+            self.slot_pos[s] += 1
+            done = len(self.slot_out[s]) >= req.max_new_tokens or \
+                (self.eos_id is not None and next_tok[s] == self.eos_id) or \
+                self.slot_pos[s] >= self.c_max
+            if done:
+                self.results[req.rid] = ServeResult(
+                    rid=req.rid, output_tokens=self.slot_out[s],
+                    prefill_iters=self._prefill_iters.get(req.rid, 0),
+                    decode_iters=len(self.slot_out[s]),
+                    queue_iters=self._queue_iters.get(req.rid, 0))
+                self.slot_req[s] = None

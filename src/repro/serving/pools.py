@@ -1,0 +1,94 @@
+"""Two-pool serving runtime: the FleetOpt plan made executable.
+
+Wires together:
+  * the planner's (n_s, n_l, B_short, gamma) output,
+  * the gateway router with the extractive compressor (C&R),
+  * one InferenceEngine per pool (short pool sized for B_short tokens,
+    long pool for c_max_long).
+
+This is the end-to-end "implementation mechanism" of the paper: the
+boundary B*_short is enforced in software at the gateway, and the hard
+OOM guarantee (Eq. 15) means no compressed request can overflow the
+short pool's KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.compression import ExtractiveCompressor, count_tokens
+from repro.core.router import LONG, SHORT, GatewayRouter, RoutingDecision
+from repro.core.workload import Request
+from repro.serving.engine import InferenceEngine, ServeRequest, ServeResult
+from repro.serving.tokenizer import ByteChunkTokenizer
+
+
+@dataclasses.dataclass
+class GatewayRequest:
+    rid: int
+    text: str
+    max_output_tokens: int
+    category: str = "prose"
+
+
+@dataclasses.dataclass
+class GatewayResponse:
+    rid: int
+    pool: str
+    compressed: bool
+    compression_ms: float
+    output_tokens: List[int]
+    prefill_iters: int
+    decode_iters: int
+    queue_iters: int
+
+
+class TwoPoolRuntime:
+    def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
+                 n_max_short: int, n_max_long: int, c_max_long: int,
+                 c_chunk: int = 512):
+        self.cfg = cfg
+        self.tokenizer = ByteChunkTokenizer(cfg.vocab_size)
+        self.router = GatewayRouter(b_short=b_short, gamma=gamma,
+                                    compressor=ExtractiveCompressor())
+        self.engines: Dict[str, InferenceEngine] = {
+            SHORT: InferenceEngine(cfg, params, n_max_short, b_short,
+                                   c_chunk),
+            LONG: InferenceEngine(cfg, params, n_max_long, c_max_long,
+                                  c_chunk),
+        }
+        self._decisions: Dict[int, RoutingDecision] = {}
+
+    def submit(self, req: GatewayRequest) -> RoutingDecision:
+        prompt_tokens = self.tokenizer.count(req.text)
+        r = Request(l_total=prompt_tokens + req.max_output_tokens,
+                    l_in=prompt_tokens, l_out=req.max_output_tokens,
+                    category=req.category,
+                    prompt_bytes=len(req.text.encode("utf-8")))
+        decision = self.router.route(r, prompt_text=req.text)
+        text = decision.compressed_text if decision.compressed else req.text
+        ids = self.tokenizer.encode(text)
+        self.engines[decision.pool].submit(ServeRequest(
+            rid=req.rid, tokens=ids, max_new_tokens=req.max_output_tokens,
+            category=req.category))
+        self._decisions[req.rid] = decision
+        # feed the bytes-per-token EMA with the true tokenizer count
+        self.router.ema.update(req.category, len(text.encode("utf-8")),
+                               len(ids))
+        return decision
+
+    def run(self, max_iters: int = 100_000) -> Dict[int, GatewayResponse]:
+        out: Dict[int, GatewayResponse] = {}
+        results: Dict[int, ServeResult] = {}
+        for eng in self.engines.values():
+            results.update(eng.run_to_completion(max_iters))
+        for rid, res in results.items():
+            d = self._decisions[rid]
+            out[rid] = GatewayResponse(
+                rid=rid, pool=d.pool, compressed=d.compressed,
+                compression_ms=d.compression_ms,
+                output_tokens=res.output_tokens,
+                prefill_iters=res.prefill_iters,
+                decode_iters=res.decode_iters, queue_iters=res.queue_iters)
+        return out

@@ -1,0 +1,2 @@
+from repro.sim.des import (FleetDES, PoolStats, simulate_pool,  # noqa: F401
+                           validation_table)

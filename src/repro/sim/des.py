@@ -1,0 +1,225 @@
+"""Discrete-event fleet simulator — the inference-fleet-sim analog
+(paper §7.4, [Chen et al. 2026c]).
+
+Each pool is simulated as c = n_gpus * n_max KV slots with FIFO
+queueing; a request occupies a slot for
+S = (ceil(L_in/C_chunk) + L_out) * t_iter seconds (the same service
+model the analytical planner uses — the validation checks that the
+*queueing* abstractions agree, exactly as the paper's DES does).
+Records the fraction of slot-time busy (GPU utilization rho_hat) and
+empirical queue-wait percentiles.
+
+Fleets at paper scale have up to ~33k slots and mean occupancies of
+minutes, so reaching steady state with a full-fleet event loop would
+need millions of arrivals. We exploit the many-server regime the paper
+itself identifies (§7.4): each pool is *Poisson-thinned* to at most
+``max_sim_slots`` slots (keeping lambda/c fixed, which preserves
+utilization and the Erlang-C wait probability's scale regime), and the
+horizon is set to ``horizon_services`` mean service times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.planner import FleetPlan, PoolPlan
+from repro.core.profiles import HardwareProfile
+from repro.core.router import LONG, SHORT
+from repro.core.workload import COMPRESSIBLE, Workload
+
+
+@dataclasses.dataclass
+class PoolStats:
+    name: str
+    n_gpus: int
+    n_slots: int              # simulated slots (after thinning)
+    served: int
+    busy_time: float
+    horizon: float
+    waits: np.ndarray
+    ttfts: np.ndarray
+    thin_frac: float
+
+    @property
+    def utilization(self) -> float:
+        if self.horizon <= 0 or self.n_slots == 0:
+            return 0.0
+        return self.busy_time / (self.n_slots * self.horizon)
+
+    def wait_p99(self) -> float:
+        return float(np.percentile(self.waits, 99)) if len(self.waits) else 0.0
+
+    def ttft_p99(self) -> float:
+        return float(np.percentile(self.ttfts, 99)) if len(self.ttfts) else 0.0
+
+
+def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
+                  c_slots: int, t_iter: float, t_chunk: float,
+                  c_chunk: int, warmup: float, name: str = "pool",
+                  n_gpus: int = 0, thin_frac: float = 1.0) -> PoolStats:
+    """Event-driven M/G/c slot simulation for one pool (FIFO)."""
+    from collections import deque
+    n = len(arrivals)
+    service = (np.ceil(l_in / c_chunk) + l_out) * t_iter
+    prefill = np.ceil(l_in / c_chunk) * t_chunk
+    starts = np.empty(n)
+    busy_heap: list = []      # completion times of in-service requests
+    queue: deque = deque()    # FIFO of waiting request indices
+    for i in range(n):
+        t = arrivals[i]
+        # free slots up to time t; freed slots admit queued requests FIFO
+        while busy_heap and busy_heap[0] <= t:
+            tc = heapq.heappop(busy_heap)
+            if queue:
+                j = queue.popleft()
+                starts[j] = tc          # tc >= arrivals[j] (it was queued)
+                heapq.heappush(busy_heap, tc + service[j])
+        if len(busy_heap) < c_slots:
+            starts[i] = t
+            heapq.heappush(busy_heap, t + service[i])
+        else:
+            queue.append(i)
+    while queue:                        # drain
+        tc = heapq.heappop(busy_heap)
+        j = queue.popleft()
+        starts[j] = tc
+        heapq.heappush(busy_heap, tc + service[j])
+
+    t_end = arrivals[-1] if n else warmup
+    t0, t1 = warmup, t_end
+    ends = starts + service
+    lo = np.clip(starts, t0, t1)
+    hi = np.clip(ends, t0, t1)
+    busy_time = float(np.maximum(hi - lo, 0.0).sum())
+    waits = starts - arrivals
+    ttfts = waits + prefill + t_iter
+    mask = arrivals >= t0
+    return PoolStats(name=name, n_gpus=n_gpus, n_slots=c_slots, served=n,
+                     busy_time=busy_time, horizon=t1 - t0,
+                     waits=waits[mask], ttfts=ttfts[mask],
+                     thin_frac=thin_frac)
+
+
+def mmpp_arrivals(n: int, lam: float, rng, burst_factor: float = 1.8,
+                  mean_period_s: float = 30.0) -> np.ndarray:
+    """Two-state Markov-modulated Poisson arrivals with mean rate
+    ``lam``: the rate alternates between lam*burst_factor and
+    lam*(2 - burst_factor) (clipped at 0.1*lam; keep burst_factor
+    <= 1.9 for an unbiased mean), with exponential state holding
+    times. Burstier tails than Poisson at equal load — used to stress
+    the planner's small-pool sizing (EXPERIMENTS.md §Findings)."""
+    hi = lam * burst_factor
+    lo = max(0.1 * lam, lam * (2.0 - burst_factor))
+    out = np.empty(n)
+    t = 0.0
+    i = 0
+    state_hi = True
+    while i < n:
+        period = rng.exponential(mean_period_s)
+        rate = hi if state_hi else lo
+        k = min(n - i, max(1, int(rate * period)))
+        gaps = rng.exponential(1.0 / rate, size=k)
+        ts = t + np.cumsum(gaps)
+        out[i:i + k] = ts
+        t = ts[-1]
+        i += k
+        state_hi = not state_hi
+    return out
+
+
+class FleetDES:
+    """Drive a two-pool (or homogeneous) fleet from a workload through
+    the C&R gateway decision rule, Poisson arrivals at rate lam (or
+    MMPP with ``arrival_process="mmpp"``)."""
+
+    def __init__(self, plan: FleetPlan, profile: HardwareProfile,
+                 workload: Workload, gamma: Optional[float] = None,
+                 max_sim_slots: int = 4096, horizon_services: float = 40.0):
+        self.plan = plan
+        self.profile = profile
+        self.workload = workload
+        self.gamma = gamma if gamma is not None else plan.gamma
+        self.max_sim_slots = max_sim_slots
+        self.horizon_services = horizon_services
+
+    def run(self, n_requests: int = 30_000, lam: float = 1000.0,
+            seed: int = 0, arrival_process: str = "poisson",
+            burst_factor: float = 1.8) -> Dict[str, PoolStats]:
+        w, plan = self.workload, self.plan
+        rng = np.random.default_rng(seed)
+        pools = {}
+        if plan.short is not None and plan.short.n_gpus > 0:
+            pools[SHORT] = plan.short
+        if plan.long is not None and plan.long.n_gpus > 0:
+            pools[LONG] = plan.long
+
+        # horizon long enough for the slowest pool to reach steady state
+        max_es = max(p.moments.mean for p in pools.values() if p.moments.mean)
+        horizon = self.horizon_services * max_es
+        n_total = max(n_requests, int(lam * horizon * 1.15))
+
+        l_total, l_in, l_out = w.sample_arrays(n_total, seed)
+        if arrival_process == "mmpp":
+            arrivals = mmpp_arrivals(n_total, lam, rng, burst_factor)
+        else:
+            arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_total))
+        cats = rng.uniform(size=n_total)
+        p_compressible_cat = sum(
+            v for k, v in w.category_probs.items() if k in COMPRESSIBLE)
+
+        # vectorized gateway decision (same rule as GatewayRouter.route)
+        if SHORT in pools:
+            b = plan.b_short
+            below = l_total <= b
+            borderline = (~below) & (l_total <= self.gamma * b)
+            # borderline band: category mix per workload (code excluded)
+            ok = rng.uniform(size=n_total) < w.p_c
+            compressed = borderline & ok & (self.gamma > 1.0)
+            to_short = below | compressed
+            li = l_in.copy()
+            li[compressed] = np.maximum(b - l_out[compressed], 1)
+            routes = {SHORT: (to_short, li), LONG: (~to_short, l_in)}
+        else:
+            routes = {LONG: (np.ones(n_total, bool), l_in)}
+        del p_compressible_cat
+
+        out: Dict[str, PoolStats] = {}
+        for name, pp in pools.items():
+            mask, li = routes[name]
+            # Poisson-thin the pool to <= max_sim_slots slots
+            c_full = pp.n_gpus * pp.n_max
+            thin = min(1.0, self.max_sim_slots / c_full)
+            c_sim = max(1, int(round(c_full * thin)))
+            thin = c_sim / c_full
+            keep = mask & (rng.uniform(size=n_total) < thin)
+            idx = np.where(keep)[0]
+            out[name] = simulate_pool(
+                arrivals[idx], li[idx], l_out[idx],
+                c_sim, self.profile.t_iter(pp.c_max),
+                self.profile.w_ms / 1000.0, self.profile.c_chunk,
+                warmup=0.25 * horizon, name=name, n_gpus=pp.n_gpus,
+                thin_frac=thin)
+        return out
+
+
+def validation_table(plan: FleetPlan, profile: HardwareProfile,
+                     workload: Workload, gamma: float = 1.0,
+                     seed: int = 0) -> list:
+    """Paper Table 5: analytical vs DES utilization per pool."""
+    des = FleetDES(plan, profile, workload, gamma=gamma)
+    stats = des.run(seed=seed)
+    rows = []
+    for name, ps in stats.items():
+        pp: PoolPlan = plan.short if name == SHORT else plan.long
+        rho_ana = pp.utilization
+        rho_hat = ps.utilization
+        rows.append({
+            "pool": name, "n_gpus": pp.n_gpus, "rho_ana": rho_ana,
+            "rho_des": rho_hat,
+            "error": (rho_ana - rho_hat) / rho_hat if rho_hat else math.inf,
+        })
+    return rows

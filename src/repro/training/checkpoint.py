@@ -1,0 +1,49 @@
+"""Minimal checkpointing: params/opt-state pytrees -> flat .npz +
+a JSON treedef manifest. Restores onto the current device/sharding
+layout (arrays are saved host-side; resharding happens on the next
+jit call via in_shardings)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, params, opt_state=None) -> None:
+    os.makedirs(path, exist_ok=True)
+    payload = {"params": params}
+    if opt_state is not None:
+        payload["opt"] = opt_state
+    leaves, treedef = _flatten(payload)
+    np.savez(os.path.join(path, f"ckpt_{step:08d}.npz"),
+             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "n_leaves": len(leaves)}, f)
+
+
+def latest_step(path: str) -> int:
+    if not os.path.isdir(path):
+        return -1
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else -1
+
+
+def restore(path: str, step: int, like) -> Any:
+    """``like``: a pytree with the target structure (params or
+    {"params":..., "opt":...})."""
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, expected {len(leaves)}"
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    return jax.tree.unflatten(treedef, new_leaves)

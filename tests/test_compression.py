@@ -1,0 +1,98 @@
+"""C&R extractive compressor (paper §5.2): budget guarantee,
+primacy/recency invariant, fidelity metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (ExtractiveCompressor, count_tokens,
+                                    rouge_l_recall, split_sentences,
+                                    tfidf_cosine, tfidf_matrix,
+                                    textrank_scores_np)
+
+WORDS = ["fleet", "gpu", "queue", "token", "cache", "slot", "router",
+         "prompt", "budget", "pool", "latency", "batch", "shard"]
+
+
+def make_text(rng, n_sent):
+    sents = []
+    for i in range(n_sent):
+        k = rng.integers(5, 18)
+        sents.append(" ".join(rng.choice(WORDS, size=k)) + ".")
+    return " ".join(sents)
+
+
+@given(n_sent=st.integers(6, 60), budget_frac=st.floats(0.3, 0.9),
+       seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_budget_guarantee(n_sent, budget_frac, seed):
+    """Eq. 15: if compression reports success, the output NEVER exceeds
+    the token budget (the hard no-OOM guarantee)."""
+    rng = np.random.default_rng(seed)
+    text = make_text(rng, n_sent)
+    c = ExtractiveCompressor()
+    budget = max(10, int(count_tokens(text) * budget_frac))
+    res = c.compress(text, budget)
+    if res.success:
+        assert res.compressed_tokens <= budget
+    assert res.original_tokens == count_tokens(text)
+
+
+def test_primacy_recency_invariant():
+    rng = np.random.default_rng(7)
+    text = make_text(rng, 40)
+    sents = split_sentences(text)
+    c = ExtractiveCompressor()
+    res = c.compress(text, int(count_tokens(text) * 0.5))
+    assert res.success
+    kept = set(res.kept_indices)
+    assert {0, 1, 2} <= kept, "first 3 sentences must be retained"
+    assert {len(sents) - 2, len(sents) - 1} <= kept, \
+        "last 2 sentences must be retained"
+
+
+def test_short_text_passthrough():
+    c = ExtractiveCompressor()
+    res = c.compress("Short prompt.", 100)
+    assert res.success and res.text == "Short prompt."
+    assert res.token_reduction == 0.0
+
+
+def test_tiny_budget_fails_not_truncates():
+    rng = np.random.default_rng(3)
+    text = make_text(rng, 30)
+    res = ExtractiveCompressor().compress(text, 5)
+    assert not res.success     # mandatory sentences alone bust the budget
+
+
+def test_latency_band():
+    """Paper Table 4: single-digit ms for borderline prompts."""
+    rng = np.random.default_rng(11)
+    text = make_text(rng, 200)
+    res = ExtractiveCompressor().compress(text, count_tokens(text) // 2)
+    assert res.latency_ms < 200.0       # generous CPU-container bound
+
+
+def test_fidelity_metrics_bounds():
+    rng = np.random.default_rng(5)
+    text = make_text(rng, 30)
+    res = ExtractiveCompressor().compress(text, int(count_tokens(text) * .6))
+    r = rouge_l_recall(text, res.text)
+    cos = tfidf_cosine(text, res.text)
+    assert 0.0 <= r <= 1.0 and 0.0 <= cos <= 1.0
+    assert rouge_l_recall(text, text) == 1.0
+    assert tfidf_cosine(text, text) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_sentence_split_unicode():
+    sents = split_sentences("Hello there. 你好吗？ Ça va! Multi\n\npara.")
+    assert len(sents) >= 3
+
+
+def test_textrank_is_probability():
+    rng = np.random.default_rng(13)
+    m = tfidf_matrix([make_text(rng, 1) for _ in range(20)])
+    sim = m @ m.T
+    p = textrank_scores_np(sim)
+    assert p.shape == (20,)
+    assert abs(p.sum() - 1.0) < 1e-6
+    assert np.all(p > 0)

@@ -1,0 +1,58 @@
+"""DES validation of the analytical model (paper §7.4, Table 5):
+utilization error <= 3% per pool."""
+import pytest
+
+from repro.core.planner import plan_two_pool
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload
+from repro.sim.des import FleetDES, simulate_pool, validation_table
+
+import numpy as np
+
+
+@pytest.mark.parametrize("name", ["azure", "lmsys"])
+def test_utilization_error_within_3pct(name):
+    w = get_workload(name)
+    plan = plan_two_pool(w, 1000.0, 0.5, A100_LLAMA70B, w.b_short, 1.0)
+    rows = validation_table(plan, A100_LLAMA70B, w, gamma=1.0, seed=3)
+    assert len(rows) == 2
+    for r in rows:
+        assert abs(r["error"]) <= 0.03, r
+
+
+def test_cr_shifts_traffic_short():
+    w = get_workload("azure")
+    plan = plan_two_pool(w, 1000.0, 0.5, A100_LLAMA70B, w.b_short, 1.5)
+    des = FleetDES(plan, A100_LLAMA70B, w, gamma=1.5)
+    stats = des.run(seed=5)
+    frac_short = stats["short"].served / (stats["short"].served
+                                          + stats["long"].served)
+    # alpha' = alpha + beta*p_c ~ 0.976 vs alpha = 0.898; thinning keeps
+    # proportions in expectation
+    assert frac_short > 0.85
+
+
+def test_simulate_pool_mm_c_wait():
+    """Tiny M/M/c-ish check: overload queueing produces waits."""
+    rng = np.random.default_rng(0)
+    n = 4000
+    arrivals = np.cumsum(rng.exponential(0.01, n))      # lam=100/s
+    l_in = np.full(n, 512.0)
+    l_out = rng.integers(40, 60, n).astype(float)       # E[S]~1s, c=50
+    st = simulate_pool(arrivals, l_in, l_out, c_slots=50, t_iter=0.02,
+                       t_chunk=0.008, c_chunk=512, warmup=5.0)
+    # rho ~ lam*E[S]/c = 100*1.02/50 > 1 -> saturated, waits growing
+    assert st.utilization > 0.95
+    assert st.wait_p99() > 0.0
+
+
+def test_stable_pool_no_waits():
+    rng = np.random.default_rng(1)
+    n = 3000
+    arrivals = np.cumsum(rng.exponential(0.02, n))      # lam=50/s
+    l_in = np.full(n, 512.0)
+    l_out = np.full(n, 49.0)                            # E[S]=1s, c=100
+    st = simulate_pool(arrivals, l_in, l_out, c_slots=100, t_iter=0.02,
+                       t_chunk=0.008, c_chunk=512, warmup=10.0)
+    assert st.utilization == pytest.approx(0.5, abs=0.05)
+    assert st.wait_p99() == pytest.approx(0.0, abs=1e-9)

@@ -1,0 +1,45 @@
+"""Guard the dry-run deliverable: every saved (arch x shape x mesh)
+record must be status=ok with sane analysis fields. Skips cleanly if
+the dry-run has not been executed in this checkout."""
+import glob
+import json
+import os
+
+import pytest
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "results", "dryrun")
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN, "*.json")),
+                    reason="dry-run not executed")
+def test_all_combinations_ok():
+    files = glob.glob(os.path.join(DRYRUN, "*.json"))
+    combos = set()
+    for f in files:
+        d = json.load(open(f))
+        assert d["status"] == "ok", (f, d.get("error"))
+        assert d["extrapolated"]["flops"] > 0, f
+        assert "argument_size_in_bytes" in d["memory_analysis"], f
+        combos.add((d["arch"], d["shape"], d["mesh"]))
+    archs = {c[0] for c in combos}
+    shapes = {c[1] for c in combos}
+    meshes = {c[2] for c in combos}
+    assert len(archs) == 10, sorted(archs)
+    assert shapes == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert meshes == {"16x16", "2x16x16"}
+    assert len(combos) == 80, len(combos)
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN, "*.json")),
+                    reason="dry-run not executed")
+def test_multipod_halves_per_device_flops():
+    """The pod axis must actually shard: per-device FLOPs on 512 chips
+    ~ half of 256 chips for the train shapes."""
+    for arch in ("nemotron-4-340b", "minitron-8b"):
+        one = json.load(open(os.path.join(
+            DRYRUN, f"{arch}__train_4k__16x16.json")))
+        two = json.load(open(os.path.join(
+            DRYRUN, f"{arch}__train_4k__2x16x16.json")))
+        ratio = two["extrapolated"]["flops"] / one["extrapolated"]["flops"]
+        assert 0.4 < ratio < 0.6, (arch, ratio)

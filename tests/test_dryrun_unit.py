@@ -1,0 +1,38 @@
+"""Dry-run machinery units: HLO collective parser + depth variants."""
+import pytest
+
+from repro.configs.base import get_config, list_configs
+from repro.launch.dryrun import collective_bytes, depth_variants
+
+HLO = """
+  %ar = f32[16,128]{1,0} all-reduce(%add.3), replica_groups={}
+  %ag.1 = bf16[2,4096]{1,0} all-gather(%p0), dimensions={0}
+  %a2a.2 = (bf16[8,64]{1,0}, bf16[8,64]{1,0}) all-to-all-start(%x), foo
+  %cp = u32[4]{0} collective-permute(%y)
+  %rs.7 = f32[8]{0} reduce-scatter(%z), dimensions={0}
+  %notacoll = f32[2]{0} add(%a, %b)
+"""
+
+
+def test_collective_parser():
+    got = collective_bytes(HLO)
+    assert got["all-reduce"] == 16 * 128 * 4
+    assert got["all-gather"] == 2 * 4096 * 2
+    assert got["all-to-all"] == 2 * 8 * 64 * 2
+    assert got["collective-permute"] == 4 * 4
+    assert got["reduce-scatter"] == 8 * 4
+    assert "add" not in got
+
+
+@pytest.mark.parametrize("arch", [a for a in list_configs()
+                                  if a != "llama3-70b"])
+def test_depth_variants_structure(arch):
+    cfg = get_config(arch)
+    c1, c2, n1, n2, nf = depth_variants(cfg)
+    assert n2 == n1 + 1 and nf >= n2
+    assert c1.d_model == c2.d_model == cfg.d_model
+    assert c1.num_layers < c2.num_layers <= cfg.num_layers
+    # depth-unit arithmetic: layers per unit consistent
+    assert (c2.num_layers - c1.num_layers) * (nf - n1) \
+        + c1.num_layers <= cfg.num_layers + \
+        (cfg.num_layers % max(c2.num_layers - c1.num_layers, 1))

@@ -1,0 +1,80 @@
+"""Serving engine + two-pool runtime end-to-end."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, ServeRequest
+from repro.serving.pools import GatewayRequest, TwoPoolRuntime
+from repro.serving.tokenizer import ByteChunkTokenizer
+
+
+@pytest.fixture(scope="module")
+def small_model(rng_key=jax.random.PRNGKey(0)):
+    cfg = reduced_f32("llama3-70b")
+    return cfg, M.init_params(cfg, rng_key)
+
+
+def test_engine_basic(small_model):
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=2, c_max=128, c_chunk=16)
+    eng.submit(ServeRequest(rid=0, tokens=[1, 2, 3, 4], max_new_tokens=5))
+    eng.submit(ServeRequest(rid=1, tokens=list(range(1, 40)),
+                            max_new_tokens=3))
+    res = eng.run_to_completion(max_iters=200)
+    assert len(res[0].output_tokens) == 5
+    assert len(res[1].output_tokens) == 3
+    assert res[1].prefill_iters == 3        # ceil(39/16)
+
+
+def test_engine_queueing(small_model):
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=1, c_max=64, c_chunk=16)
+    for rid in range(3):
+        eng.submit(ServeRequest(rid=rid, tokens=[1, 2, 3],
+                                max_new_tokens=2))
+    res = eng.run_to_completion(max_iters=200)
+    assert len(res) == 3
+    # the third request must have waited for a slot
+    assert res[2].queue_iters > 0
+
+
+def test_engine_refuses_oversized(small_model):
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=1, c_max=32, c_chunk=16)
+    eng.submit(ServeRequest(rid=9, tokens=list(range(1, 40)),
+                            max_new_tokens=10))
+    res = eng.run_to_completion(max_iters=50)
+    assert res[9].output_tokens == []       # refused, not crashed
+
+
+def test_two_pool_runtime_cr(small_model):
+    cfg, params = small_model
+    rt = TwoPoolRuntime(cfg, params, b_short=256, gamma=1.5,
+                        n_max_short=4, n_max_long=2, c_max_long=2048,
+                        c_chunk=64)
+    border = " ".join(
+        f"Background sentence {i} with detail about topic {i % 5} and some "
+        f"padding words for length." for i in range(13))
+    tok = ByteChunkTokenizer(cfg.vocab_size)
+    n_tok = tok.count(border)
+    assert 256 < n_tok + 8 <= 384, n_tok    # really borderline
+    d0 = rt.submit(GatewayRequest(rid=0, text="short question",
+                                  max_output_tokens=4))
+    d1 = rt.submit(GatewayRequest(rid=1, text=border, max_output_tokens=8))
+    d2 = rt.submit(GatewayRequest(rid=2, text=border * 4,
+                                  max_output_tokens=8))
+    assert d0.pool == "short" and not d0.compressed
+    assert d1.pool == "short" and d1.compressed          # C&R
+    assert d1.l_in_effective + 8 <= 256                  # Eq. 15
+    assert d2.pool == "long"
+    res = rt.run(max_iters=3000)
+    assert all(len(r.output_tokens) > 0 for r in res.values())
+    assert res[1].pool == "short"
+
+
+def test_tokenizer_counts():
+    tok = ByteChunkTokenizer(1000)
+    text = "hello world, this is a test."
+    assert tok.count(text) == len(tok.encode(text))

@@ -1,0 +1,72 @@
+"""Block-causal flash prefill path == dense _sdpa reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+import dataclasses
+from conftest import reduced_f32
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd,chunk,window", [
+    (2, 256, 8, 2, 64, 64, 0),
+    (1, 512, 4, 4, 32, 128, 0),
+    (2, 256, 8, 2, 64, 64, 100),    # sliding window
+    (1, 256, 2, 1, 64, 256, 0),     # single chunk
+])
+def test_flash_vs_sdpa(b, s, h, hkv, hd, chunk, window):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    ref = L._sdpa(q, k, v, L.causal_mask(s, s, window)[None], h // hkv)
+    got = L._flash_causal(q, k, v, h // hkv, window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_different_v_dim():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, hd, vd = 2, 256, 4, 32, 48
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, vd))
+    ref = jnp.einsum(
+        "bhst,bthd->bshd",
+        jax.nn.softmax(jnp.where(L.causal_mask(s, s)[None, None],
+                                 jnp.einsum("bshd,bthd->bhst", q, k)
+                                 / np.sqrt(hd), -1e30), -1),
+        v).reshape(b, s, h * vd)
+    got = L._flash_causal(q, k, v, 1, 0, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_mla_flash_matches_dense(monkeypatch):
+    cfg = reduced_f32("deepseek-v2-236b")
+    p = MLA.init_mla(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model)) * 0.5
+    ref, _, _ = MLA.mla_attention(p, cfg, x)
+    monkeypatch.setattr(L, "FLASH_MIN_SEQ", 128)
+    monkeypatch.setattr(
+        MLA, "_flash_causal",
+        lambda q, k, v, qpk, w: L._flash_causal(q, k, v, qpk, w, chunk=64))
+    got, _, _ = MLA.mla_attention(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_forward_uses_flash_above_threshold(monkeypatch):
+    """End-to-end: forward at S above the (patched) threshold equals
+    forward below it."""
+    cfg = reduced_f32("minitron-8b")
+    params = __import__("repro.models.model", fromlist=["x"]).init_params(
+        cfg, jax.random.PRNGKey(0))
+    from repro.models import model as M
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 128), 0,
+                              cfg.vocab_size)
+    dense, _ = M.forward(params, cfg, {"tokens": toks})
+    monkeypatch.setattr(L, "FLASH_MIN_SEQ", 64)
+    monkeypatch.setattr(L, "FLASH_CHUNK", 32)
+    flash, _ = M.forward(params, cfg, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               atol=1e-4)

@@ -1,0 +1,77 @@
+"""§Perf optimizations preserve numerics: layer remat, sequence
+parallelism (single-device degenerate), microbatching, int8 KV."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.train_step import loss_fn, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_f32("minitron-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 1,
+                                          cfg.vocab_size)}
+    return cfg, params, batch
+
+
+def _grads(cfg, params, batch, remat):
+    (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch, None, remat)
+    return g
+
+
+def test_layer_remat_matches_no_remat(setup):
+    cfg, params, batch = setup
+    g0 = _grads(cfg, params, batch, False)
+    g1 = _grads(cfg, params, batch, "layer")
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_microbatching_matches_full_batch(setup):
+    cfg, params, batch = setup
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    opt = init_adamw(params)
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt_cfg))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=2))(
+        params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_int8_kv_decode_close(setup):
+    cfg, params, _ = setup
+    cfgq = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    ref, _ = M.forward(params, cfg, {"tokens": toks})
+    cache = M.init_cache(cfgq, B, 32)
+    # int8 cache halves the big leaves
+    assert cache["kv"]["k"].dtype == jnp.int8
+    for t in range(S):
+        lg, cache = M.decode_step(params, cfgq, toks[:, t:t + 1], cache, t)
+    scale = float(np.max(np.abs(np.asarray(ref[:, -1]))))
+    rel = float(np.max(np.abs(np.asarray(lg) - np.asarray(ref[:, -1]))))
+    assert rel / scale < 0.05
+
+
+def test_int8_kv_ragged_positions(setup):
+    cfg, params, _ = setup
+    cfgq = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    cache = M.init_cache(cfgq, 2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    lg, cache2 = M.decode_step(params, cfgq, tok, cache,
+                               jnp.array([0, 3], jnp.int32))
+    assert not np.any(np.isnan(lg))

@@ -1,0 +1,104 @@
+"""FleetOpt planner (Algorithm 1) behaviour + paper claims."""
+import time
+
+import pytest
+
+from repro.core.cost import cliff_ratio, cr_incremental_savings, \
+    pool_routing_savings
+from repro.core.planner import (Infeasible, fleetopt_plan, plan_homogeneous,
+                                plan_two_pool)
+from repro.core.profiles import A100_LLAMA70B, profile_for_arch
+from repro.core.workload import get_workload
+from repro.configs.base import get_config
+
+LAM, SLO = 1000.0, 0.5
+
+
+@pytest.fixture(scope="module", params=["azure", "lmsys", "agent-heavy"])
+def plans(request):
+    w = get_workload(request.param)
+    homo = plan_homogeneous(w, LAM, SLO, A100_LLAMA70B)
+    pr = plan_two_pool(w, LAM, SLO, A100_LLAMA70B, w.b_short, 1.0)
+    retro = plan_two_pool(w, LAM, SLO, A100_LLAMA70B, w.b_short, 1.5)
+    fo, grid = fleetopt_plan(w, LAM, SLO, A100_LLAMA70B, fixed_b=w.b_short)
+    return w, homo, pr, retro, fo, grid
+
+
+def test_two_pool_beats_homogeneous(plans):
+    w, homo, pr, retro, fo, grid = plans
+    assert pr.total_gpus < homo.total_gpus
+
+
+def test_cr_beats_plain_pool_routing(plans):
+    w, homo, pr, retro, fo, grid = plans
+    assert retro.total_gpus <= pr.total_gpus
+    assert fo.total_gpus <= retro.total_gpus      # Theorem 2 (co >= retro)
+
+
+def test_utilization_capped(plans):
+    _, homo, pr, retro, fo, grid = plans
+    for plan in (homo, pr, retro, fo):
+        for pool in (plan.short, plan.long):
+            if pool and pool.n_gpus:
+                assert pool.utilization <= 0.8501
+
+
+def test_slo_met(plans):
+    _, homo, pr, retro, fo, _ = plans
+    for plan in (homo, pr, retro, fo):
+        for pool in (plan.short, plan.long):
+            if pool and pool.n_gpus:
+                assert pool.ttft_p99_s <= SLO + 1e-9
+
+
+def test_gamma_star_archetype(plans):
+    """Paper §4.3: Archetype I/II workloads push gamma* high (2.0)."""
+    w, *_, fo, grid = plans
+    if w.name in ("azure", "lmsys"):
+        assert fo.gamma >= 1.8
+    assert (w.b_short, fo.gamma) in grid
+
+
+def test_monotone_cost_in_lambda():
+    w = get_workload("azure")
+    totals = [plan_two_pool(w, lam, SLO, A100_LLAMA70B, w.b_short, 1.5
+                            ).total_gpus for lam in (100.0, 500.0, 1000.0)]
+    assert totals[0] < totals[1] < totals[2]
+
+
+def test_planner_speed():
+    """Paper §6: the sweep completes in well under a second (the <1 ms
+    figure excludes the Monte-Carlo calibration; we bound end-to-end)."""
+    w = get_workload("lmsys")
+    fleetopt_plan(w, LAM, SLO, A100_LLAMA70B, fixed_b=w.b_short)  # warm
+    t0 = time.perf_counter()
+    fleetopt_plan(w, LAM, SLO, A100_LLAMA70B, fixed_b=w.b_short)
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_cliff_ratios_match_paper():
+    """Paper §2.2: rho = 8x @8192, 16x @4096, 42x @1536."""
+    assert cliff_ratio(A100_LLAMA70B, 8192) == pytest.approx(8.0)
+    assert cliff_ratio(A100_LLAMA70B, 4096) == pytest.approx(16.0)
+    assert cliff_ratio(A100_LLAMA70B, 1536) == pytest.approx(42.0, rel=0.03)
+
+
+def test_savings_formulas():
+    assert pool_routing_savings(0.9, 8.0) == pytest.approx(0.7875)
+    assert cr_incremental_savings(0.078, 1.0, 16.0) == pytest.approx(
+        0.073125)
+
+
+def test_profile_for_arch():
+    p = profile_for_arch(get_config("deepseek-v2-236b"))
+    # MLA cache (67.5 KB/token) -> ~4.7x more slots than llama3-70b
+    assert p.n_ref > 4 * A100_LLAMA70B.n_ref
+    p_ssm = profile_for_arch(get_config("xlstm-350m"))
+    assert p_ssm.context_free_slots          # O(1) state
+    assert p_ssm.n_max(4096) == p_ssm.n_max(65536)   # flat cliff (rho=1)
+
+
+def test_infeasible_slo():
+    w = get_workload("agent-heavy")
+    with pytest.raises(Infeasible):
+        plan_homogeneous(w, LAM, 0.005, A100_LLAMA70B)

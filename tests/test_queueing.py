@@ -1,0 +1,69 @@
+"""Queueing-math properties (paper §3, App. A)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queueing import erlang_c, kimura_w99, service_moments
+
+
+@given(c=st.integers(1, 200), rho=st.floats(0.01, 0.99))
+@settings(max_examples=200, deadline=None)
+def test_erlang_c_bounds(c, rho):
+    p = erlang_c(c, rho)
+    assert 0.0 <= p <= 1.0
+
+
+@given(c=st.integers(1, 100), rho=st.floats(0.05, 0.95))
+@settings(max_examples=100, deadline=None)
+def test_erlang_c_monotone_in_rho(c, rho):
+    assert erlang_c(c, min(rho + 0.02, 0.999)) >= erlang_c(c, rho) - 1e-12
+
+
+@given(c=st.integers(1, 60), rho=st.floats(0.1, 0.9))
+@settings(max_examples=100, deadline=None)
+def test_erlang_c_monotone_in_c(c, rho):
+    # more servers at the same per-server utilization -> lower wait prob
+    assert erlang_c(c + 1, rho) <= erlang_c(c, rho) + 1e-12
+
+
+def test_erlang_c_known_values():
+    # M/M/1: C(1, rho) = rho
+    for rho in (0.1, 0.5, 0.9):
+        assert abs(erlang_c(1, rho) - rho) < 1e-9
+    # M/M/2 closed form: C = 2 rho^2 / (1 + rho)
+    for rho in (0.2, 0.6):
+        expect = 2 * rho ** 2 / (1 + rho)
+        assert abs(erlang_c(2, rho) - expect) < 1e-9
+
+
+def test_many_server_regime_shortcut():
+    # paper §7.4: at fleet scale (c ~ 1e4 slots) the wait prob is ~0
+    assert erlang_c(30_000, 0.85) == 0.0
+    assert kimura_w99(30_000, 1.0, 0.85 * 30_000, 1.0) == 0.0
+
+
+@given(c=st.integers(2, 200), lam_frac=st.floats(0.1, 0.84),
+       cs2=st.floats(0.0, 5.0))
+@settings(max_examples=100, deadline=None)
+def test_w99_nonnegative_finite(c, lam_frac, cs2):
+    mu = 1.0
+    w = kimura_w99(c, mu, lam_frac * c * mu, cs2)
+    assert w >= 0.0 and math.isfinite(w)
+
+
+def test_w99_decreasing_in_servers():
+    lam, mu, cs2 = 8.0, 1.0, 1.5
+    ws = [kimura_w99(c, mu, lam, cs2) for c in range(9, 60, 5)]
+    assert all(a >= b - 1e-12 for a, b in zip(ws, ws[1:]))
+
+
+def test_service_moments():
+    l_in = np.full(1000, 1024.0)
+    l_out = np.full(1000, 100.0)
+    m = service_moments(l_in, l_out, t_iter=0.0184, c_chunk=512)
+    assert abs(m.mean - (2 + 100) * 0.0184) < 1e-9
+    assert m.cs2 == pytest.approx(0.0, abs=1e-12)
+    assert m.mean_prefill_iters == 2.0
+    assert m.p99_prefill_iters == 2.0

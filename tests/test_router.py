@@ -1,0 +1,80 @@
+"""Gateway router: pool decision boundaries + C&R interception."""
+import numpy as np
+import pytest
+
+from repro.core.router import LONG, SHORT, BytesPerTokenEMA, GatewayRouter
+from repro.core.workload import Request
+
+
+def req(l_in, l_out, category="prose", bytes_per_token=4):
+    return Request(l_total=l_in + l_out, l_in=l_in, l_out=l_out,
+                   category=category, prompt_bytes=l_in * bytes_per_token)
+
+
+def test_below_boundary_goes_short():
+    r = GatewayRouter(b_short=4096, gamma=1.5)
+    d = r.route(req(1000, 100))
+    assert d.pool == SHORT and not d.compressed
+
+
+def test_above_band_goes_long():
+    r = GatewayRouter(b_short=4096, gamma=1.5)
+    d = r.route(req(10000, 500))
+    assert d.pool == LONG
+
+
+def test_borderline_prose_compresses():
+    r = GatewayRouter(b_short=4096, gamma=1.5, p_c=1.0)
+    d = r.route(req(4500, 200, "prose"))    # 4700 in (4096, 6144]
+    assert d.pool == SHORT and d.compressed
+    assert d.l_total_effective <= 4096 + 200
+
+
+def test_borderline_code_safety_gate():
+    """Paper §5.2: code is excluded from compression."""
+    r = GatewayRouter(b_short=4096, gamma=1.5, p_c=1.0)
+    d = r.route(req(4500, 200, "code"))
+    assert d.pool == LONG and not d.compressed
+
+
+def test_oom_guarantee_real_text():
+    r = GatewayRouter(b_short=120, gamma=2.0)
+    text = " ".join(f"Sentence {i} about systems and fleets." for i in
+                    range(40))
+    rq = req(200, 20, "prose")
+    d = r.route(rq, prompt_text=text)
+    if d.compressed:
+        assert d.l_total_effective <= 120 + 20  # ... actually <= B_short
+        assert d.l_in_effective + rq.l_out <= 120
+
+
+def test_budget_nonpositive_goes_long():
+    r = GatewayRouter(b_short=4096, gamma=1.5)
+    d = r.route(req(500, 4200, "prose"))   # l_out alone exceeds B_short
+    assert d.pool == LONG
+
+
+def test_ema_estimation():
+    ema = BytesPerTokenEMA(decay=0.5)
+    assert ema.get("prose") == 4.0
+    ema.update("prose", prompt_bytes=900, true_tokens=300)   # 3 b/t
+    assert 3.0 < ema.get("prose") < 4.0
+    for _ in range(20):
+        ema.update("prose", 900, 300)
+    assert ema.get("prose") == pytest.approx(3.0, abs=0.01)
+
+
+def test_stats_accounting():
+    r = GatewayRouter(b_short=1000, gamma=1.5, p_c=1.0, seed=0)
+    for _ in range(50):
+        r.route(req(500, 50))
+    for _ in range(10):
+        r.route(req(1200, 100, "prose"))
+    for _ in range(5):
+        r.route(req(5000, 100))
+    s = r.stats
+    assert s.total == 65
+    assert s.borderline == 10
+    assert s.to_short == 50 + s.compressed_ok
+    assert s.p_c_observed == 1.0
+    assert s.alpha_observed > 0.75

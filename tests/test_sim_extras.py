@@ -1,0 +1,35 @@
+"""MMPP arrivals + planner FOC sanity."""
+import numpy as np
+import pytest
+
+from repro.sim.des import mmpp_arrivals
+
+
+def test_mmpp_mean_rate():
+    rng = np.random.default_rng(0)
+    n, lam = 200_000, 1000.0
+    t = mmpp_arrivals(n, lam, rng, burst_factor=1.8, mean_period_s=2.0)
+    assert np.all(np.diff(t) > 0)
+    rate = n / t[-1]
+    assert rate == pytest.approx(lam, rel=0.15)
+
+
+def test_mmpp_burstier_than_poisson():
+    rng = np.random.default_rng(1)
+    n, lam = 100_000, 1000.0
+    t = mmpp_arrivals(n, lam, rng, burst_factor=1.8, mean_period_s=10.0)
+    gaps = np.diff(t)
+    cv2 = gaps.var() / gaps.mean() ** 2
+    assert cv2 > 1.1          # Poisson has CV^2 = 1
+
+
+def test_foc_gap_negative_for_azure():
+    """EXPERIMENTS §Findings 2: the Prop.-1 marginal-cost gap has no
+    interior zero for Azure under the literal Eq. 3 model."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.bench_foc_verification import run
+    rows = run()
+    assert all(r["foc_gap"] < 0 for r in rows)
+    best = [r for r in rows if r["is_swept_optimum"]]
+    assert best[0]["b_short"] == max(r["b_short"] for r in rows)

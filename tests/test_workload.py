@@ -1,0 +1,59 @@
+"""Workload CDFs reproduce every statistic the paper publishes."""
+import numpy as np
+import pytest
+
+from repro.core.workload import get_workload, list_workloads
+
+# paper Table 2 + §7.1
+PUBLISHED = {
+    "azure": dict(b_short=4096, alpha=0.898, beta=0.078, mean=1588,
+                  p90=4242, p99=7445),
+    "lmsys": dict(b_short=1536, alpha=0.909, beta=0.046),
+    "agent-heavy": dict(b_short=8192, alpha=0.740, beta=0.112, mean=6511,
+                        p50=4096, p90=16384, p99=32768),
+}
+
+
+@pytest.mark.parametrize("name", list(PUBLISHED))
+def test_published_anchors(name):
+    w = get_workload(name)
+    pub = PUBLISHED[name]
+    assert w.alpha() == pytest.approx(pub["alpha"], abs=1e-3)
+    assert w.beta(1.5) == pytest.approx(pub["beta"], abs=1e-3)
+    if "mean" in pub:
+        assert w.cdf.mean() == pytest.approx(pub["mean"], rel=0.01)
+    for q, key in ((0.5, "p50"), (0.9, "p90"), (0.99, "p99")):
+        if key in pub:
+            assert float(w.cdf.quantile(q)) == pytest.approx(pub[key],
+                                                             rel=0.02)
+
+
+@pytest.mark.parametrize("name", list(PUBLISHED))
+def test_sampling_consistency(name):
+    w = get_workload(name)
+    lt, li, lo = w.sample_arrays(50_000, seed=1)
+    assert np.all(li >= 1) and np.all(lo >= 1)
+    assert np.all(lt == li + lo)
+    emp_alpha = float((lt <= w.b_short).mean())
+    assert emp_alpha == pytest.approx(w.alpha(), abs=0.01)
+    assert lt.mean() == pytest.approx(w.cdf.mean(), rel=0.05)
+
+
+def test_p_c_matches_paper():
+    # paper Table 3: p_c=1.0 for azure/lmsys, 0.75 for agent-heavy
+    assert get_workload("azure").p_c == 1.0
+    assert get_workload("lmsys").p_c == 1.0
+    assert get_workload("agent-heavy").p_c == 0.75
+
+
+def test_request_categories():
+    w = get_workload("agent-heavy")
+    reqs = w.sample(20_000, seed=2)
+    border = [r for r in reqs
+              if w.b_short < r.l_total <= 1.5 * w.b_short]
+    code_frac = sum(r.category == "code" for r in border) / len(border)
+    assert code_frac == pytest.approx(0.25, abs=0.04)
+
+
+def test_list_workloads():
+    assert set(list_workloads()) == {"azure", "lmsys", "agent-heavy"}
