@@ -179,7 +179,13 @@ class ExtractiveCompressor:
 
         keep = set(range(min(PRIMACY, n))) | set(range(max(0, n - RECENCY), n))
         budget_used = int(tok[sorted(keep)].sum())
-        order = np.argsort(-scores)
+        # rank on quantized scores with a stable index tie-break: scorer
+        # backends (numpy vs the Pallas textrank kernel) differ at
+        # ~1e-8, which an unstable argsort amplifies into different
+        # kept sets. Quantizing to 1e-6 makes cross-backend agreement
+        # overwhelmingly likely (a score can still straddle a rounding
+        # boundary, so this is a mitigation, not a proof).
+        order = np.lexsort((np.arange(n), -np.round(scores, 6)))
         for i in order:
             i = int(i)
             if i in keep:

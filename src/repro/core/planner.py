@@ -156,7 +156,11 @@ def _split(s: _Samples, b: int, gamma: float
     """
     below = s.l_total <= b
     borderline = (~below) & (s.l_total <= gamma * b)
-    compressed = borderline & s.compressible
+    # the router refuses to compress when the T_c budget b - l_out is
+    # non-positive (router.py _compress_and_route) — those borderline
+    # requests go to the LONG pool; mirroring that here keeps alpha_eff
+    # and the short-pool service moments consistent with serving
+    compressed = borderline & s.compressible & (s.l_out < b)
     to_long = ~(below | compressed)
 
     lin_s = np.concatenate([
@@ -229,10 +233,11 @@ def fleetopt_plan(workload: Workload, lam: float = 1000.0,
             except Infeasible:
                 continue
             grid[(b, g)] = p.annual_cost
+            # on equal annual cost prefer smaller gamma (less compression
+            # risk), then smaller B (tighter short pool)
             if best is None or p.annual_cost < best.annual_cost or (
-                    # prefer smaller gamma on cost ties (less compression risk)
                     p.annual_cost == best.annual_cost and
-                    (b, g) == (best.b_short, best.gamma)):
+                    (g, b) < (best.gamma, best.b_short)):
                 best = p
     if best is None:
         raise Infeasible("no feasible (B, gamma) point")

@@ -26,7 +26,7 @@ DEFAULT_BLOCK_S = 512
 NEG_INF = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, active_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, scale: float, blocks: int):
     sb = pl.program_id(2)
 
@@ -36,25 +36,32 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                    # (qpk, hd)
-    k = k_ref[0, 0]                    # (blk, hd)
-    v = v_ref[0, 0]                    # (blk, hd)
-    valid = valid_ref[0]               # (blk,)
+    # Continuous-batching mask: rows whose slot is mid-prefill or empty
+    # skip the whole KV sweep — no flops spent, and the finalize below
+    # emits exact zeros for them (the engine ignores those rows).
+    active = active_ref[0] != 0
 
-    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
-                preferred_element_type=jnp.float32) * scale
-    s = jnp.where(valid[None, :], s, NEG_INF)          # (qpk, blk)
+    @pl.when(active)
+    def _sweep():
+        q = q_ref[0, 0]                    # (qpk, hd)
+        k = k_ref[0, 0]                    # (blk, hd)
+        v = v_ref[0, 0]                    # (blk, hd)
+        valid = valid_ref[0]               # (blk,)
 
-    m_prev = m_ref[...]                                # (qpk,)
-    m_new = jnp.maximum(m_prev, s.max(axis=1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])                    # (qpk, blk)
-    p = jnp.where(valid[None, :], p, 0.0)
-    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
-        jnp.dot(p, v.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, :], s, NEG_INF)          # (qpk, blk)
+
+        m_prev = m_ref[...]                                # (qpk,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                    # (qpk, blk)
+        p = jnp.where(valid[None, :], p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(sb == blocks - 1)
     def _finalize():
@@ -63,10 +70,12 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def gqa_decode(q, k_cache, v_cache, valid, block_s: int = DEFAULT_BLOCK_S,
-               interpret: bool = True):
+def gqa_decode(q, k_cache, v_cache, valid, active=None,
+               block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
     """q: (B, H, hd); k_cache/v_cache: (B, S, Hkv, hd); valid: (B, S)
-    bool. Returns (B, H*hd). ``interpret=True`` runs the kernel body in
+    bool; active: optional (B,) bool — rows with active=False skip the
+    KV sweep entirely and return zeros (continuous-batching no-op rows).
+    Returns (B, H*hd). ``interpret=True`` runs the kernel body in
     Python on CPU (validation mode); on TPU pass interpret=False."""
     b, h, hd = q.shape
     s_max, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -79,6 +88,10 @@ def gqa_decode(q, k_cache, v_cache, valid, block_s: int = DEFAULT_BLOCK_S,
     qg = q.reshape(b, hkv, qpk, hd)
     kt = jnp.swapaxes(k_cache, 1, 2)       # (B, Hkv, S, hd)
     vt = jnp.swapaxes(v_cache, 1, 2)
+    if active is None:
+        act = jnp.ones((b,), jnp.int32)
+    else:
+        act = active.astype(jnp.int32)
 
     out = pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, blocks=blocks),
@@ -90,6 +103,7 @@ def gqa_decode(q, k_cache, v_cache, valid, block_s: int = DEFAULT_BLOCK_S,
             pl.BlockSpec((1, 1, block_s, hd),
                          lambda b_, h_, s_: (b_, h_, s_, 0)),
             pl.BlockSpec((1, block_s), lambda b_, h_, s_: (b_, s_)),
+            pl.BlockSpec((1,), lambda b_, h_, s_: (b_,)),
         ],
         out_specs=pl.BlockSpec((1, 1, qpk, hd),
                                lambda b_, h_, s_: (b_, h_, 0, 0)),
@@ -100,5 +114,5 @@ def gqa_decode(q, k_cache, v_cache, valid, block_s: int = DEFAULT_BLOCK_S,
             pltpu.VMEM((qpk, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, kt, vt, valid)
+    )(qg, kt, vt, valid, act)
     return out.reshape(b, h * hd)

@@ -17,9 +17,11 @@ from repro.kernels.textrank import textrank_pallas
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def gqa_decode(q, k_cache, v_cache, valid, block_s: int = 512):
-    """Flash-decode attention; see kernels/gqa_decode.py."""
-    return _gqa_pallas(q, k_cache, v_cache, valid, block_s=block_s,
+def gqa_decode(q, k_cache, v_cache, valid, active=None, block_s: int = 512):
+    """Flash-decode attention; see kernels/gqa_decode.py. ``active``
+    (B,) bool masks out continuous-batching rows that carry no live
+    decode this step (their output is exactly zero)."""
+    return _gqa_pallas(q, k_cache, v_cache, valid, active, block_s=block_s,
                        interpret=INTERPRET)
 
 

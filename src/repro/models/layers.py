@@ -284,17 +284,22 @@ def dequantize_kv(q, scale):
 
 
 def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
-                     window: int = 0, decode_impl: str = "xla"):
+                     window: int = 0, decode_impl: str = "xla",
+                     active=None):
     """Single-token decode. x: (B,1,D); kv: cache dict with "k"/"v"
     (B,S,Hkv,hd) and optional int8 "k_scale"/"v_scale"; pos: (B,) or
-    scalar absolute position of the new token. Returns (out, new_kv)."""
+    scalar absolute position of the new token. ``active``: optional (B,)
+    bool — rows with active=False leave their cache row BIT-IDENTICAL
+    (the continuous-batching invariant: empty / mid-prefill slots must
+    never see spurious KV writes). Returns (out, new_kv)."""
     b = x.shape[0]
     k_cache, v_cache = kv["k"], kv["v"]
     quant = "k_scale" in kv
     s_max = k_cache.shape[1]
     pos = jnp.asarray(pos)
-    uniform = pos.ndim == 0   # all sequences at the same position: O(1) write
-    if uniform:
+    # all sequences at the same position AND no mask: O(1) slice write
+    uniform = pos.ndim == 0 and active is None
+    if pos.ndim == 0:
         pos = jnp.broadcast_to(pos, (b,))
     q, k, v = _qkv(p, cfg, x, x)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
@@ -311,10 +316,12 @@ def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
             new_kv["k_scale"] = dus(kv["k_scale"], ks, slot[0], 1)
             new_kv["v_scale"] = dus(kv["v_scale"], vs, slot[0], 1)
         else:
-            new_kv["k"] = _scatter_slot(k_cache, kq[:, 0], slot)
-            new_kv["v"] = _scatter_slot(v_cache, vq[:, 0], slot)
-            new_kv["k_scale"] = _scatter_scalar(kv["k_scale"], ks[:, 0], slot)
-            new_kv["v_scale"] = _scatter_scalar(kv["v_scale"], vs[:, 0], slot)
+            new_kv["k"] = _scatter_slot(k_cache, kq[:, 0], slot, active)
+            new_kv["v"] = _scatter_slot(v_cache, vq[:, 0], slot, active)
+            new_kv["k_scale"] = _scatter_scalar(kv["k_scale"], ks[:, 0],
+                                                slot, active)
+            new_kv["v_scale"] = _scatter_scalar(kv["v_scale"], vs[:, 0],
+                                                slot, active)
         k_cache = dequantize_kv(new_kv["k"], new_kv["k_scale"])
         v_cache = dequantize_kv(new_kv["v"], new_kv["v_scale"])
     elif uniform:
@@ -322,8 +329,8 @@ def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
         v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot[0], 1)
         new_kv["k"], new_kv["v"] = k_cache, v_cache
     else:
-        k_cache = _scatter_slot(k_cache, k[:, 0], slot)
-        v_cache = _scatter_slot(v_cache, v[:, 0], slot)
+        k_cache = _scatter_slot(k_cache, k[:, 0], slot, active)
+        v_cache = _scatter_slot(v_cache, v[:, 0], slot, active)
         new_kv["k"], new_kv["v"] = k_cache, v_cache
     # validity: absolute position of cache entry j
     j = jnp.arange(s_max)[None, :]
@@ -334,22 +341,76 @@ def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
         valid = j <= pos[:, None]
     if decode_impl == "pallas":
         from repro.kernels import ops as kops
-        out = kops.gqa_decode(q[:, 0], k_cache, v_cache, valid)
+        out = kops.gqa_decode(q[:, 0], k_cache, v_cache, valid, active)
         out = out.reshape(b, 1, -1)
     else:
         out = _sdpa(q, k_cache, v_cache, valid[:, None, :], cfg.q_per_kv)
     return out @ p["wo"], new_kv
 
 
-def _scatter_scalar(cache, new, slot):
+def _scatter_scalar(cache, new, slot, active=None):
     """cache: (B,S,H); new: (B,H); slot: (B,)."""
     onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
+    if active is not None:
+        onehot = onehot * active.astype(cache.dtype)[:, None]
     return cache * (1 - onehot)[:, :, None] + onehot[:, :, None] * new[:, None]
 
 
-def _scatter_slot(cache, new, slot):
-    """cache: (B,S,H,hd); new: (B,H,hd); slot: (B,) -> write per batch."""
-    b = cache.shape[0]
+def _scatter_slot(cache, new, slot, active=None):
+    """cache: (B,S,H,hd); new: (B,H,hd); slot: (B,) -> write per batch.
+    ``active`` masks out rows entirely (their one-hot becomes all-zero,
+    so ``cache * 1 + 0`` reproduces the row bit-for-bit)."""
     onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
+    if active is not None:
+        onehot = onehot * active.astype(cache.dtype)[:, None]
     return cache * (1 - onehot)[:, :, None, None] + \
         onehot[:, :, None, None] * new[:, None]
+
+
+# -- chunked prefill (batched multi-slot) -----------------------------------
+def write_chunk_kv(kv: Params, k, v, start, lengths) -> Params:
+    """Blend-write one prefill chunk per batch row into contiguous KV
+    caches at per-row offsets.
+
+    kv: cache dict with "k"/"v" (B,S,Hkv,hd) (+ optional int8 scales);
+    k/v: (B,L,Hkv,hd) new entries; start: (B,) first absolute position;
+    lengths: (B,) valid token count (0 => that row is a bitwise no-op).
+
+    Rows whose chunk is shorter than L keep the old cache contents at
+    the padded positions, so a single padded-bucket trace serves every
+    chunk length without corrupting neighbouring cache entries.
+    """
+    new_kv = dict(kv)
+    if "k_scale" in kv:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_kv["k"] = _blend_rows(kv["k"], kq, start, lengths)
+        new_kv["v"] = _blend_rows(kv["v"], vq, start, lengths)
+        new_kv["k_scale"] = _blend_rows(kv["k_scale"], ks, start, lengths)
+        new_kv["v_scale"] = _blend_rows(kv["v_scale"], vs, start, lengths)
+    else:
+        new_kv["k"] = _blend_rows(kv["k"], k, start, lengths)
+        new_kv["v"] = _blend_rows(kv["v"], v, start, lengths)
+    return new_kv
+
+
+def _blend_rows(cache, new, start, lengths):
+    """Per-row dynamic_update_slice of ``new`` (B,L,...) into ``cache``
+    (B,S,...) at offset ``start``, keeping old values where the token
+    index >= lengths. Handles the start+L > S overhang (the final chunk
+    of a near-capacity prompt) by clamping the window and rolling the
+    chunk so every valid token still lands at its absolute position."""
+    s_max, l = cache.shape[1], new.shape[1]
+
+    def row(c, nw, st, ln):
+        st_eff = jnp.clip(st, 0, s_max - l)
+        shift = st - st_eff                       # >0 only on overhang
+        rolled = jnp.roll(nw, shift, axis=0)
+        w = jnp.arange(l)
+        keep = (w >= shift) & ((w - shift) < ln)
+        keep = keep.reshape((l,) + (1,) * (nw.ndim - 1))
+        cur = jax.lax.dynamic_slice_in_dim(c, st_eff, l, 0)
+        blended = jnp.where(keep, rolled, cur)
+        return jax.lax.dynamic_update_slice_in_dim(c, blended, st_eff, 0)
+
+    return jax.vmap(row)(cache, new, start, lengths)

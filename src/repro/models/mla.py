@@ -91,18 +91,20 @@ def init_mla_cache(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int,
 
 
 def mla_decode(p: Dict, cfg: ModelConfig, x, ckv_cache, kr_cache, pos,
-               window: int = 0):
+               window: int = 0, active=None):
     """Absorbed decode. x: (B,1,D); caches (B,S,lora)/(B,S,rope);
     pos: scalar (uniform batch position) or (B,) vector. With
     ``window`` > 0 the caches are ring buffers of size min(S, window).
+    ``active``: optional (B,) bool — inactive rows leave their cache
+    rows bit-identical (continuous-batching no-op invariant).
     Returns (out, caches)."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.num_heads
     s_max = ckv_cache.shape[1]
     pos = jnp.asarray(pos)
-    uniform = pos.ndim == 0
-    pos_b = jnp.broadcast_to(pos, (b,)) if uniform else pos
+    uniform = pos.ndim == 0 and active is None
+    pos_b = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
     slot = pos % s_max if window > 0 else pos
     slot_b = pos_b % s_max if window > 0 else pos_b
     q_nope, q_rope = _project_q(p, cfg, x, pos_b[:, None])
@@ -115,6 +117,8 @@ def mla_decode(p: Dict, cfg: ModelConfig, x, ckv_cache, kr_cache, pos,
         kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, k_r, slot, 1)
     else:       # ragged per-sequence positions (continuous batching)
         onehot = jax.nn.one_hot(slot_b, s_max, dtype=ckv_cache.dtype)
+        if active is not None:
+            onehot = onehot * active.astype(ckv_cache.dtype)[:, None]
         ckv_cache = ckv_cache * (1 - onehot)[:, :, None] \
             + onehot[:, :, None] * c_kv
         kr_cache = kr_cache * (1 - onehot)[:, :, None] \

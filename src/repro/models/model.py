@@ -598,8 +598,14 @@ def _ssm_fill(params, cfg, x, cache):
 def decode_step(params: Params, cfg: ModelConfig, token, cache: Params,
                 pos, parallel=None,
                 window: Optional[int] = None,
-                decode_impl: str = "xla") -> Tuple[jnp.ndarray, Params]:
-    """token: (B,1) int32; pos: scalar int (uniform across batch).
+                decode_impl: str = "xla",
+                active=None) -> Tuple[jnp.ndarray, Params]:
+    """token: (B,1) int32; pos: scalar int (uniform across batch) or
+    (B,) per-row positions (continuous batching). ``active``: optional
+    (B,) bool mask — rows with active=False are provable no-ops on the
+    cache (bit-identical rows out), the invariant the serving engine
+    relies on for empty / mid-prefill slots. Their logits are garbage
+    and must be ignored by the caller.
     Returns (logits (B,V), new cache)."""
     b = token.shape[0]
     x = params["embed"][token]
@@ -611,12 +617,14 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache: Params,
         h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         if cfg.mla is not None:
             a, ckv, kr = MLA.mla_decode(lp["attn"], cfg, h, kv["c_kv"],
-                                        kv["k_r"], pos, window=w or 0)
+                                        kv["k_r"], pos, window=w or 0,
+                                        active=active)
             new = {"c_kv": ckv, "k_r": kr}
         else:
             a, new = L.decode_attention(lp["attn"], cfg, h, kv, pos,
                                         window=w or 0,
-                                        decode_impl=decode_impl)
+                                        decode_impl=decode_impl,
+                                        active=active)
         x = x + a
         h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
@@ -668,9 +676,9 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache: Params,
                                        cache["xk"], cache["xv"]))
         cache = dict(cache, kv=kv)
     elif fam == HYBRID:
-        x, cache = _hybrid_decode(params, cfg, x, cache, pos, w)
+        x, cache = _hybrid_decode(params, cfg, x, cache, pos, w, active)
     elif fam == SSM:
-        x, cache = _ssm_decode(params, cfg, x, cache)
+        x, cache = _ssm_decode(params, cfg, x, cache, active)
 
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
     head = params.get("lm_head")
@@ -678,7 +686,119 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache: Params,
     return logits[:, 0], cache
 
 
-def _hybrid_decode(params, cfg, x, cache, pos, w):
+def _mask_state(new, old, active):
+    """Blend recurrent-state pytrees along the leading batch axis:
+    inactive rows keep their old state bit-for-bit."""
+    if active is None:
+        return new
+    def blend(n, o):
+        m = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(blend, new, old)
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache: Params,
+                  start_pos, lengths, parallel=None,
+                  window: Optional[int] = None,
+                  decode_impl: str = "xla") -> Tuple[jnp.ndarray, Params]:
+    """Batched multi-slot chunked prefill — one fixed-shape call
+    advances EVERY slot with a pending chunk by up to L tokens
+    (Sarathi-style chunked prefill; paper §3.1's ceil(L_in/C_chunk)
+    prefill iterations).
+
+    tokens: (B, L) int32, one zero-padded chunk per batch row, where L
+    is the padded bucket length (the trace count is bounded by the
+    number of buckets, not by the request-length mix);
+    start_pos: (B,) absolute position of each chunk's first token;
+    lengths: (B,) valid tokens per row — rows with lengths == 0 are
+    provable bitwise no-ops on the cache.
+
+    Returns (last_logits (B, V), cache). last_logits holds each row's
+    logits after its final valid token (garbage for idle rows).
+
+    Dense/MoE full-attention models run a fused sequence-level chunk
+    (the whole chunk attends the cache + itself causally in one pass);
+    other families (MLA, VLM, enc-dec, windowed ring buffers, SSM)
+    fall back to a masked per-token decode scan inside the same
+    fixed-shape trace.
+    """
+    b, l = tokens.shape
+    w = cfg.attention_window if window is None else window
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if cfg.family in (DENSE, MOE) and cfg.mla is None and not w:
+        return _prefill_chunk_fused(params, cfg, tokens, cache, start_pos,
+                                    lengths, parallel)
+
+    def body(carry, t):
+        cache, logits = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, 1)
+        act = t < lengths
+        lg, cache = decode_step(params, cfg, tok, cache, start_pos + t,
+                                parallel=parallel, window=window,
+                                decode_impl=decode_impl, active=act)
+        logits = jnp.where(act[:, None], lg, logits)
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, jnp.zeros((b, cfg.vocab_size), jnp.dtype(cfg.dtype))),
+        jnp.arange(l))
+    return logits, cache
+
+
+def _prefill_chunk_fused(params, cfg, tokens, cache, start_pos, lengths,
+                         parallel):
+    """Sequence-level chunk prefill for contiguous-cache dense/MoE
+    attention: write the chunk's K/V into the batched cache in place,
+    then attend chunk queries over (cache prefix + chunk) causally."""
+    b, l = tokens.shape
+    x = params["embed"][tokens]                          # (B, L, D)
+    positions = start_pos[:, None] + jnp.arange(l)[None, :]
+
+    def body(x, inp):
+        lp, kv = inp
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], cfg, h, h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kv = L.write_chunk_kv(kv, k, v, start_pos, lengths)
+        if "k_scale" in kv:
+            k_all = L.dequantize_kv(kv["k"], kv["k_scale"])
+            v_all = L.dequantize_kv(kv["v"], kv["v_scale"])
+        else:
+            k_all, v_all = kv["k"], kv["v"]
+        s_max = k_all.shape[1]
+        # query at absolute position p sees cache entries j <= p: the
+        # already-filled prefix plus this chunk's own causal triangle
+        # (both live in the cache after write_chunk_kv).
+        valid = jnp.arange(s_max)[None, None, :] <= positions[:, :, None]
+        a = L._sdpa(q, k_all, v_all, valid, cfg.q_per_kv)
+        x = x + a @ lp["attn"]["wo"]
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            if parallel is None:
+                m, _ = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+            else:
+                m, _ = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h, parallel,
+                                                 mode="a2a")
+            x = x + m
+        else:
+            x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, kv
+
+    x, kv = _scan(body, x, (params["layers"], cache["kv"]))
+    cache = dict(cache, kv=kv)
+    # gather each row's final valid hidden state BEFORE the LM head so
+    # the (vocab) projection runs over 1 position per row, not L
+    last = jnp.clip(lengths - 1, 0, l - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, 0], cache
+
+
+def _hybrid_decode(params, cfg, x, cache, pos, w, active=None):
     every = cfg.ssm.shared_attn_every
     n_groups, rem = divmod(cfg.num_layers, every)
     sp = params["shared_attn"]
@@ -687,14 +807,14 @@ def _hybrid_decode(params, cfg, x, cache, pos, w):
         lp, st = inp
         h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
         y, st2 = S.mamba2_decode(lp["mamba"], cfg, h, st)
-        return x + y, st2
+        return x + y, _mask_state(st2, st, active)
 
     def group(x, inp):
         lps, st, kv = inp
         x, st2 = _scan(mamba_layer, x, (lps, st))
         h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
         a, kv2 = L.decode_attention(sp["attn"], cfg, h, kv, pos,
-                                    window=w or 0)
+                                    window=w or 0, active=active)
         x = x + a
         h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
         x = x + L.mlp(sp["mlp"], cfg, h)
@@ -725,7 +845,7 @@ def _hybrid_decode(params, cfg, x, cache, pos, w):
     return x, cache
 
 
-def _ssm_decode(params, cfg, x, cache):
+def _ssm_decode(params, cfg, x, cache, active=None):
     pattern = cfg.ssm.block_pattern or ("mlstm",)
 
     def group(x, inp):
@@ -737,7 +857,7 @@ def _ssm_decode(params, cfg, x, cache):
             h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
             fn = S.mlstm_decode if kind == "mlstm" else S.slstm_decode
             y, st2 = fn(lp["core"], cfg, h, st)
-            new[key] = st2
+            new[key] = _mask_state(st2, st, active)
             x = x + y
         return x, new
     x, st = _scan(group, x, (params["layers"], cache["ssm"]))

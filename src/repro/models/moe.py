@@ -78,7 +78,10 @@ def moe_block_sharded(p: Dict, cfg: ModelConfig, x, parallel,
     axis and computed on local tokens either way.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:          # jax < 0.5 keeps it in experimental
+        from jax.experimental.shard_map import shard_map
 
     mx = parallel.model_axis
     p_specs = {"router": P(None, None),

@@ -6,6 +6,19 @@ each ``step()`` is one iteration (one decode token for every active
 slot). Prefill is chunked at ``c_chunk`` tokens per iteration
 (Sarathi-style), matching E[S] = (ceil(L_in/C_chunk) + L_out) * t_iter.
 
+The step path is FIXED-SHAPE (see DESIGN.md §Engine):
+
+  * one jitted decode trace, total — a per-slot active mask makes
+    empty / mid-prefill slots provable bitwise no-ops on the cache
+    (the continuous-batching correctness invariant);
+  * prefill chunks are padded to a small set of bucketed lengths
+    (powers of two up to ``c_chunk``), so the number of compiled
+    prefill traces is bounded by the bucket count, independent of the
+    request-length mix — no per-request recompiles;
+  * every slot with a pending chunk advances in ONE jitted call per
+    iteration (batched multi-slot prefill with in-place
+    dynamic_update_slice on the batched cache), not one call per slot.
+
 The engine is functional at the device boundary: all device state lives
 in ``self.cache`` (a pytree) and is updated by jit'd steps. Slot
 bookkeeping (which request occupies which slot) is host-side — exactly
@@ -15,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +36,20 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+
+
+def prefill_buckets(c_chunk: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Padded chunk lengths: powers of two from ``min_bucket`` up to
+    (and always including) ``c_chunk``. Every prefill call pads its
+    longest pending chunk to the smallest bucket that fits, so the
+    compiled-trace count is bounded by ``len(buckets)``."""
+    buckets = []
+    b = min(min_bucket, c_chunk)
+    while b < c_chunk:
+        buckets.append(b)
+        b *= 2
+    buckets.append(c_chunk)
+    return tuple(buckets)
 
 
 @dataclasses.dataclass
@@ -56,7 +83,8 @@ class InferenceEngine:
         self.params = params
         self.n_max = n_max
         self.c_max = c_max
-        self.c_chunk = c_chunk
+        self.c_chunk = min(c_chunk, c_max)
+        self.buckets = prefill_buckets(self.c_chunk)
         self.eos_id = eos_id
         self.cache = M.init_cache(cfg, n_max, c_max)
         # per-slot host state
@@ -71,9 +99,12 @@ class InferenceEngine:
         self._queue_iters: Dict[int, int] = {}
         self._enqueued_at: Dict[int, int] = {}
         self._prefill_iters: Dict[int, int] = {}
+        # buckets that actually compiled a prefill trace this lifetime
+        self.prefill_buckets_used: Set[int] = set()
         self._decode = jax.jit(partial(self._decode_fn, decode_impl))
-        self._prefill_chunk = jax.jit(self._prefill_chunk_fn,
-                                      static_argnames=("chunk_len",))
+        # NOT static in chunk length: the bucketed token array's shape
+        # selects the trace, so traces are bounded by len(self.buckets)
+        self._prefill_step = jax.jit(partial(self._prefill_fn, decode_impl))
 
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
@@ -91,28 +122,48 @@ class InferenceEngine:
             self.step()
         return self.results
 
+    def num_compiled_traces(self) -> Dict[str, int]:
+        """Compiled-trace counts for the two jitted step functions.
+        The fixed-shape guarantee: decode <= 1 and
+        prefill <= len(self.buckets), whatever the request-length mix."""
+        def size(fn, fallback):
+            try:
+                return int(fn._cache_size())
+            except AttributeError:       # older jax: host-side tracking
+                return fallback
+        return {
+            "decode": size(self._decode, 1),
+            "prefill": size(self._prefill_step,
+                            len(self.prefill_buckets_used)),
+        }
+
+    def cache_row(self, s: int):
+        """Host copy of slot ``s``'s cache row (testing / debugging)."""
+        return jax.tree.map(
+            lambda a: np.asarray(
+                jax.lax.index_in_dim(a, s, self._batch_axis(a),
+                                     keepdims=False)), self.cache)
+
     # ----------------------------------------------------------------- step
     def step(self) -> None:
-        """One lockstep iteration: admit, advance prefills (one chunk per
-        slot), then one batched decode for slots already past prefill."""
+        """One lockstep iteration: admit, advance ALL pending prefills
+        by one chunk in a single batched jitted call, then one masked
+        batched decode for the slots already past prefill."""
         self.iteration += 1
         self._admit()
-        decode_mask = np.zeros(self.n_max, bool)
+        chunks: Dict[int, List[int]] = {}
         for s in range(self.n_max):
             req = self.slot_req[s]
-            if req is None:
+            if req is None or not self.slot_prefill_left[s]:
                 continue
-            if self.slot_prefill_left[s]:
-                chunk = self.slot_prefill_left[s][: self.c_chunk]
-                self.slot_prefill_left[s] = \
-                    self.slot_prefill_left[s][self.c_chunk:]
-                self._run_prefill_chunk(s, chunk)
-                self._prefill_iters[req.rid] = \
-                    self._prefill_iters.get(req.rid, 0) + 1
-                if not self.slot_prefill_left[s]:
-                    self.slot_last_tok[s] = chunk[-1]
-            else:
-                decode_mask[s] = True
+            chunks[s] = self.slot_prefill_left[s][: self.c_chunk]
+            self.slot_prefill_left[s] = self.slot_prefill_left[s][self.c_chunk:]
+        if chunks:
+            self._run_prefill_chunks(chunks)
+        decode_mask = np.array(
+            [self.slot_req[s] is not None and s not in chunks
+             and not self.slot_prefill_left[s] for s in range(self.n_max)],
+            bool)
         if decode_mask.any():
             self._run_decode(decode_mask)
 
@@ -133,42 +184,37 @@ class InferenceEngine:
                 self._queue_iters[req.rid] = \
                     self.iteration - self._enqueued_at[req.rid]
 
-    def _prefill_chunk_fn(self, params, cache, tokens, slot, start_pos,
-                          chunk_len):
-        """Prefill ``chunk_len`` tokens of one slot (batch row ``slot``)."""
-        cfg = self.cfg
-        b = tokens.shape[0]           # == 1
-        x = params["embed"][tokens]
-        positions = start_pos + jnp.arange(chunk_len)[None]
-        # attend over cache (previous chunks) + this chunk causally:
-        # implemented by decoding the chunk through decode positions via
-        # a scan of single tokens would be slow; instead run windowed
-        # self-attention with explicit positions against the cache.
-        # Simpler correct approach: sequential single-token decode inside
-        # a scan (chunk_len is the C_chunk budget — one iteration's work).
-        def body(carry, t):
-            cache, x_last = carry
-            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, 1)
-            logits, cache = M.decode_step(params, cfg, tok, cache,
-                                          start_pos + t)
-            return (cache, logits), None
-        (cache, logits), _ = jax.lax.scan(
-            body, (cache, jnp.zeros((b, cfg.vocab_size), cfg.dtype)),
-            jnp.arange(chunk_len))
-        return cache, logits
+    def _prefill_fn(self, decode_impl, params, cache, tokens, start_pos,
+                    lengths):
+        """One iteration's prefill work for EVERY slot with a pending
+        chunk; rows with lengths == 0 are bitwise no-ops."""
+        _, cache = M.prefill_chunk(params, self.cfg, tokens, cache,
+                                   start_pos, lengths,
+                                   decode_impl=decode_impl)
+        return cache
 
-    def _run_prefill_chunk(self, s: int, chunk: List[int]) -> None:
-        # slice this slot's cache row, run the chunk, write it back
-        row = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
-            a, s, 1, self._batch_axis(a)), self.cache)
-        toks = jnp.asarray(np.array(chunk, np.int32)[None])
-        row, _ = self._prefill_chunk(self.params, row, toks, s,
-                                     int(self.slot_pos[s]),
-                                     chunk_len=len(chunk))
-        self.cache = jax.tree.map(
-            lambda full, r: jax.lax.dynamic_update_slice_in_dim(
-                full, r, s, self._batch_axis(full)), self.cache, row)
-        self.slot_pos[s] += len(chunk)
+    def _run_prefill_chunks(self, chunks: Dict[int, List[int]]) -> None:
+        longest = max(len(c) for c in chunks.values())
+        bucket = next(b for b in self.buckets if b >= longest)
+        self.prefill_buckets_used.add(bucket)
+        tokens = np.zeros((self.n_max, bucket), np.int32)
+        lengths = np.zeros(self.n_max, np.int32)
+        for s, chunk in chunks.items():
+            tokens[s, : len(chunk)] = chunk
+            lengths[s] = len(chunk)
+        # snapshot slot_pos: jnp.asarray may alias host memory zero-copy
+        # and dispatch is async, so passing the live (mutated-below)
+        # array would race the device read
+        start = np.array(self.slot_pos, np.int32)
+        self.cache = self._prefill_step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(start), jnp.asarray(lengths))
+        for s, chunk in chunks.items():
+            rid = self.slot_req[s].rid
+            self.slot_pos[s] += len(chunk)
+            self._prefill_iters[rid] = self._prefill_iters.get(rid, 0) + 1
+            if not self.slot_prefill_left[s]:
+                self.slot_last_tok[s] = chunk[-1]
 
     def _batch_axis(self, leaf) -> int:
         # dense kv caches (L,B,S,H,hd) + int8 scales (L,B,S,H) -> 1;
@@ -179,16 +225,18 @@ class InferenceEngine:
             return 2
         return 0
 
-    def _decode_fn(self, decode_impl, params, cache, tokens, pos):
+    def _decode_fn(self, decode_impl, params, cache, tokens, pos, active):
         logits, cache = M.decode_step(params, self.cfg, tokens, cache, pos,
-                                      decode_impl=decode_impl)
+                                      decode_impl=decode_impl, active=active)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     def _run_decode(self, mask: np.ndarray) -> None:
-        toks = jnp.asarray(self.slot_last_tok[:, None])
-        pos = jnp.asarray(self.slot_pos)
+        # snapshot host state (see _run_prefill_chunks: async dispatch
+        # must never observe the in-place updates below)
+        toks = jnp.asarray(np.array(self.slot_last_tok[:, None]))
+        pos = jnp.asarray(np.array(self.slot_pos))
         next_tok, self.cache = self._decode(self.params, self.cache,
-                                            toks, pos)
+                                            toks, pos, jnp.asarray(mask))
         next_tok = np.asarray(next_tok)
         for s in np.where(mask)[0]:
             req = self.slot_req[s]

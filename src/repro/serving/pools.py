@@ -79,10 +79,22 @@ class TwoPoolRuntime:
         return decision
 
     def run(self, max_iters: int = 100_000) -> Dict[int, GatewayResponse]:
+        """Drive both pools to completion, interleaving their lockstep
+        iterations (the pools are independent engines, so interleaving
+        cannot change any request's tokens — but it models the real
+        deployment, where both pools serve concurrently, and keeps
+        per-pool iteration clocks comparable)."""
         out: Dict[int, GatewayResponse] = {}
         results: Dict[int, ServeResult] = {}
+        busy = True
+        while busy:
+            busy = False
+            for eng in self.engines.values():
+                if eng.busy() and eng.iteration < max_iters:
+                    eng.step()
+                    busy = True
         for eng in self.engines.values():
-            results.update(eng.run_to_completion(max_iters))
+            results.update(eng.results)
         for rid, res in results.items():
             d = self._decisions[rid]
             out[rid] = GatewayResponse(

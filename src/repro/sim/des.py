@@ -89,12 +89,19 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
         starts[j] = tc
         heapq.heappush(busy_heap, tc + service[j])
 
+    # Busy-time accounting (documented invariant): the measurement
+    # window is [warmup, last arrival] — the interval where the pool is
+    # in (time-)steady state — and every request whose service STARTS
+    # inside the window is credited its FULL service time, including
+    # the part completing after the last arrival. The previous code
+    # clipped busy time at arrivals[-1], dropping exactly the drain-tail
+    # service of small pools and biasing rho_hat low (busy/denominator
+    # mismatch); start-credited full service is the throughput * E[S]
+    # estimator, which is unbiased in steady state and needs no clipping.
     t_end = arrivals[-1] if n else warmup
-    t0, t1 = warmup, t_end
-    ends = starts + service
-    lo = np.clip(starts, t0, t1)
-    hi = np.clip(ends, t0, t1)
-    busy_time = float(np.maximum(hi - lo, 0.0).sum())
+    t0, t1 = warmup, max(t_end, warmup)
+    started = (starts >= t0) & (starts <= t1)
+    busy_time = float(service[started].sum())
     waits = starts - arrivals
     ttfts = waits + prefill + t_iter
     mask = arrivals >= t0
@@ -121,12 +128,18 @@ def mmpp_arrivals(n: int, lam: float, rng, burst_factor: float = 1.8,
     while i < n:
         period = rng.exponential(mean_period_s)
         rate = hi if state_hi else lo
-        k = min(n - i, max(1, int(rate * period)))
-        gaps = rng.exponential(1.0 / rate, size=k)
-        ts = t + np.cumsum(gaps)
-        out[i:i + k] = ts
-        t = ts[-1]
-        i += k
+        # arrival count within a period is Poisson(rate * period) — a
+        # deterministic int(rate * period) would understate the burst
+        # variance the MMPP exists to model
+        k = min(n - i, int(rng.poisson(rate * period)))
+        if k > 0:
+            gaps = rng.exponential(1.0 / rate, size=k)
+            ts = t + np.cumsum(gaps)
+            out[i:i + k] = ts
+            t = ts[-1]
+            i += k
+        else:
+            t += period        # silent period, clock still advances
         state_hi = not state_hi
     return out
 
@@ -178,7 +191,9 @@ class FleetDES:
             borderline = (~below) & (l_total <= self.gamma * b)
             # borderline band: category mix per workload (code excluded)
             ok = rng.uniform(size=n_total) < w.p_c
-            compressed = borderline & ok & (self.gamma > 1.0)
+            # router refuses compression when T_c = b - l_out <= 0
+            # (router.py _compress_and_route); keep the DES rule aligned
+            compressed = borderline & ok & (self.gamma > 1.0) & (l_out < b)
             to_short = below | compressed
             li = l_in.copy()
             li[compressed] = np.maximum(b - l_out[compressed], 1)

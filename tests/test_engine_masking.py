@@ -1,0 +1,183 @@
+"""Fixed-shape engine step path: masked-decode no-op invariant, bounded
+trace counts, and mixed-batch == sequential decoding (the regression
+suite for the masked-decode KV-corruption fix)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.serving.engine import (InferenceEngine, ServeRequest,
+                                  prefill_buckets)
+from repro.serving.pools import GatewayRequest, TwoPoolRuntime
+
+
+@pytest.fixture(scope="module")
+def small_model(rng_key=jax.random.PRNGKey(0)):
+    cfg = reduced_f32("llama3-70b")
+    return cfg, M.init_params(cfg, rng_key)
+
+
+def _rows_equal(a, b) -> bool:
+    return all(np.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------- invariant
+def test_decode_step_leaves_inactive_rows_bit_identical(small_model):
+    """A decode step must be a provable no-op on the cache rows of
+    mid-prefill and empty slots (the seed engine wrote spurious KV at
+    every row's slot_pos and fails this)."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=3, c_max=128, c_chunk=16)
+    eng.submit(ServeRequest(rid=0, tokens=[5, 6, 7], max_new_tokens=8))
+    eng.submit(ServeRequest(rid=1, tokens=list(range(1, 80)),
+                            max_new_tokens=3))
+    eng.step()          # both prefill (rid0 finishes its only chunk)
+    eng.step()          # rid0 decodes; rid1 still mid-prefill
+    assert eng.slot_prefill_left[1], "slot 1 must still be mid-prefill"
+    assert eng.slot_req[2] is None, "slot 2 must be empty"
+    before = {s: eng.cache_row(s) for s in (1, 2)}
+    eng._run_decode(np.array([True, False, False]))
+    for s in (1, 2):
+        assert _rows_equal(before[s], eng.cache_row(s)), \
+            f"decode step corrupted inactive slot {s}"
+
+
+def test_prefill_step_leaves_other_rows_bit_identical(small_model):
+    """The batched prefill call must not touch slots without a pending
+    chunk (rows enter the jitted call with lengths == 0)."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=3, c_max=128, c_chunk=16)
+    eng.submit(ServeRequest(rid=0, tokens=[5, 6, 7], max_new_tokens=8))
+    eng.step()                       # rid0 prefill done
+    eng.step()                       # rid0 decodes once
+    before = {s: eng.cache_row(s) for s in (0, 2)}
+    eng.submit(ServeRequest(rid=1, tokens=list(range(1, 30)),
+                            max_new_tokens=2))
+    eng._admit()
+    eng._run_prefill_chunks({1: eng.slot_prefill_left[1][:16]})
+    for s in (0, 2):
+        assert _rows_equal(before[s], eng.cache_row(s)), \
+            f"prefill chunk corrupted unrelated slot {s}"
+
+
+def test_masked_gqa_decode_kernel_inactive_rows_zero():
+    """Pallas kernel mask plumbing: inactive rows produce exact zeros
+    and never perturb active rows' outputs."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    b, h, hkv, hd, s = 3, 8, 2, 64, 256
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    pos = jnp.asarray([10, 100, 200])
+    valid = jnp.arange(s)[None, :] <= pos[:, None]
+    active = jnp.asarray([True, False, True])
+    out = np.asarray(ops.gqa_decode(q, kc, vc, valid, active))
+    want = np.asarray(ref.gqa_decode_ref(q, kc, vc, valid))
+    np.testing.assert_allclose(out[0], want[0], atol=2e-5)
+    np.testing.assert_allclose(out[2], want[2], atol=2e-5)
+    assert np.all(out[1] == 0.0)
+
+
+# -------------------------------------------------------------- trace count
+def test_prefill_buckets_shape():
+    assert prefill_buckets(512) == (8, 16, 32, 64, 128, 256, 512)
+    assert prefill_buckets(16) == (8, 16)
+    assert prefill_buckets(12) == (8, 12)
+    assert prefill_buckets(4) == (4,)
+
+
+def test_trace_count_bounded_by_buckets(small_model):
+    """Compiled prefill/decode traces are bounded by the bucket count,
+    independent of the request-length mix (the seed jitted chunk_len as
+    a static arg: one recompile per distinct final-chunk length)."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_max=4, c_max=128, c_chunk=16)
+    # 8 distinct prompt lengths -> 8 distinct final-chunk lengths
+    for rid, n_tok in enumerate([3, 5, 7, 9, 17, 21, 26, 31]):
+        eng.submit(ServeRequest(rid=rid, tokens=list(range(1, n_tok + 1)),
+                                max_new_tokens=2))
+    eng.run_to_completion(max_iters=500)
+    assert len(eng.results) == 8
+    traces = eng.num_compiled_traces()
+    assert traces["decode"] <= 1
+    assert traces["prefill"] <= len(eng.buckets)
+    assert eng.prefill_buckets_used <= set(eng.buckets)
+
+
+# ------------------------------------------------- mixed == sequential
+def test_mixed_batch_matches_sequential_decoding(small_model):
+    """A mixed prefill/decode continuous-batching run must produce
+    exactly the tokens each request would get decoded on its own."""
+    cfg, params = small_model
+    reqs = [dict(rid=0, tokens=[5, 6, 7], max_new_tokens=6),
+            dict(rid=1, tokens=list(range(1, 40)), max_new_tokens=5),
+            dict(rid=2, tokens=list(range(20, 85)), max_new_tokens=4),
+            dict(rid=3, tokens=list(range(9, 18)), max_new_tokens=7)]
+
+    eng = InferenceEngine(cfg, params, n_max=3, c_max=128, c_chunk=16)
+    for r in reqs:
+        eng.submit(ServeRequest(**r))
+    mixed = {k: v.output_tokens
+             for k, v in eng.run_to_completion(1000).items()}
+
+    for r in reqs:
+        solo_eng = InferenceEngine(cfg, params, n_max=3, c_max=128,
+                                   c_chunk=16)
+        solo_eng.submit(ServeRequest(**r))
+        solo = solo_eng.run_to_completion(1000)[r["rid"]].output_tokens
+        assert mixed[r["rid"]] == solo, \
+            f"rid {r['rid']}: mixed {mixed[r['rid']]} != solo {solo}"
+
+
+def test_two_pool_mixed_matches_sequential(small_model):
+    """End-to-end: a TwoPoolRuntime mixed run equals per-request
+    sequential decoding through an identically-configured runtime."""
+    cfg, params = small_model
+
+    def make_rt():
+        return TwoPoolRuntime(cfg, params, b_short=256, gamma=1.5,
+                              n_max_short=4, n_max_long=2,
+                              c_max_long=2048, c_chunk=64)
+
+    border = " ".join(
+        f"Background sentence {i} with detail about topic {i % 5} and some "
+        f"padding words for length." for i in range(13))
+    reqs = [GatewayRequest(rid=0, text="short question",
+                           max_output_tokens=4),
+            GatewayRequest(rid=1, text=border, max_output_tokens=8),
+            GatewayRequest(rid=2, text=border * 4, max_output_tokens=8),
+            GatewayRequest(rid=3, text="another short question with a bit "
+                           "more text", max_output_tokens=5)]
+
+    rt = make_rt()
+    for r in reqs:
+        rt.submit(r)
+    mixed = rt.run(max_iters=3000)
+
+    for r in reqs:
+        rt_solo = make_rt()
+        rt_solo.submit(r)
+        solo = rt_solo.run(max_iters=3000)[r.rid]
+        assert mixed[r.rid].output_tokens == solo.output_tokens, r.rid
+        assert mixed[r.rid].pool == solo.pool
+
+
+def test_engine_decode_impl_pallas_consistent(small_model):
+    """The masked decode is consistent between the XLA and Pallas
+    gqa_decode paths on a mixed run."""
+    cfg, params = small_model
+    outs = {}
+    for impl in ("xla", "pallas"):
+        eng = InferenceEngine(cfg, params, n_max=2, c_max=128, c_chunk=16,
+                              decode_impl=impl)
+        eng.submit(ServeRequest(rid=0, tokens=[5, 6, 7], max_new_tokens=4))
+        eng.submit(ServeRequest(rid=1, tokens=list(range(1, 40)),
+                                max_new_tokens=3))
+        outs[impl] = {k: v.output_tokens
+                      for k, v in eng.run_to_completion(500).items()}
+    assert outs["xla"] == outs["pallas"]

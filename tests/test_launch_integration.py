@@ -4,6 +4,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -23,7 +25,7 @@ for arch in ("minitron-8b", "deepseek-v2-236b", "zamba2-1.2b"):
     step, args, in_sh, out_sh = DR.build_step(cfg, shape, ctx)
     c = jax.jit(step, in_shardings=SH.to_named(in_sh, mesh),
                 out_shardings=SH.to_named(out_sh, mesh)).lower(*args).compile()
-    assert c.cost_analysis()["flops"] > 0
+    assert DR._cost_analysis(c)["flops"] > 0
     coll = DR.collective_bytes(c.as_text())
     assert isinstance(coll, dict)
 # train kind too (exercises remat+seq-par+opt specs)
@@ -38,10 +40,13 @@ print("LAUNCH_INTEGRATION_OK")
 """
 
 
+@pytest.mark.slow
 def test_dryrun_stack_small_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("JAX_PLATFORMS", None)
+    # generous timeout: compile-bound subprocess on a cpu-share
+    # throttled box (see test_moe_sharded.py)
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=560)
+                         capture_output=True, text=True, timeout=1800)
     assert "LAUNCH_INTEGRATION_OK" in out.stdout, out.stdout + out.stderr

@@ -59,6 +59,7 @@ def test_decode_step(name, rng_key):
     assert changed
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["minitron-8b", "deepseek-v2-236b",
                                   "zamba2-1.2b", "xlstm-350m",
                                   "seamless-m4t-large-v2"])

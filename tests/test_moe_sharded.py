@@ -24,7 +24,7 @@ for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
     ctx = ParallelContext(mesh=mesh, data_axes=("data",))
     x = jax.random.normal(key, (4, 16, cfg.d_model)) * 0.5
     y_ref, _ = MOE.moe_block(p, cfg, x, None)
-    with jax.set_mesh(mesh):
+    with mesh:
         y_a2a, _ = MOE.moe_block_sharded(p, cfg, x, ctx, mode="a2a")
         y_psum, _ = MOE.moe_block_sharded(p, cfg, x, ctx, mode="psum")
     for name, y in (("a2a", y_a2a), ("psum", y_psum)):
@@ -32,7 +32,7 @@ for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
         assert err < 1e-4, (arch, name, err)
     # indivisible batch falls back gracefully
     x1 = x[:1]
-    with jax.set_mesh(mesh):
+    with mesh:
         y1, _ = MOE.moe_block_sharded(p, cfg, x1, ctx, mode="psum")
     err = float(jnp.max(jnp.abs(MOE.moe_block(p, cfg, x1, None)[0] - y1)))
     assert err < 1e-4, ("b1", err)
@@ -40,10 +40,17 @@ print("MOE_SHARDED_OK")
 """
 
 
+import pytest
+
+
+@pytest.mark.slow
 def test_moe_sharded_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("JAX_PLATFORMS", None)
+    # generous timeout: the fake-8-device compile is CPU-bound and this
+    # box is cpu-share throttled, so wall time varies ~10x with ambient
+    # load (48 s idle, >500 s when the suite runs around it)
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=500)
+                         capture_output=True, text=True, timeout=1800)
     assert "MOE_SHARDED_OK" in out.stdout, out.stdout + out.stderr

@@ -102,3 +102,49 @@ def test_infeasible_slo():
     w = get_workload("agent-heavy")
     with pytest.raises(Infeasible):
         plan_homogeneous(w, LAM, 0.005, A100_LLAMA70B)
+
+
+def test_cost_tie_prefers_smaller_gamma():
+    """On equal annual cost the sweep must prefer the smaller gamma
+    (less compression risk). lmsys at B=12288 produces a genuine tie
+    between gamma 2.0 and 1.5; sweeping the grid DESCENDING exposes the
+    tie-break (the seed's dead-code condition could never replace the
+    incumbent, so it kept the first, largest gamma)."""
+    w = get_workload("lmsys")
+    b_tie = 12288
+    best, grid = fleetopt_plan(w, LAM, SLO, A100_LLAMA70B, fixed_b=b_tie,
+                               gamma_grid=(2.0, 1.5, 1.0))
+    assert grid[(b_tie, 2.0)] == grid[(b_tie, 1.5)], \
+        "test needs an actual cost tie"
+    tied_min = min(g for g in (2.0, 1.5, 1.0)
+                   if grid.get((b_tie, g)) == min(grid.values()))
+    assert best.gamma == tied_min == 1.5
+
+
+def test_split_routes_uncompressible_borderline_to_long():
+    """Planner _split must agree with GatewayRouter._compress_and_route:
+    a borderline request with b - l_out <= 0 cannot be compressed into
+    the short pool (T_c budget empty) and goes LONG. The seed clamped
+    it to 1 prompt token and kept it short, biasing alpha_eff high."""
+    import numpy as np
+    from repro.core.planner import _Samples, _split
+    from repro.core.router import GatewayRouter
+    from repro.core.workload import Request
+
+    b, gamma = 100, 2.0
+    l_in = np.array([40, 120, 30, 290], float)
+    l_out = np.array([10, 30, 120, 10], float)
+    l_total = l_in + l_out          # 50 below; 150 bl; 150 bl; 300 long
+    s = _Samples(l_total, l_in, l_out,
+                 compressible=np.ones(4, bool))
+    (lin_s, lout_s), (lin_l, lout_l), alpha_eff = _split(s, b, gamma)
+    assert alpha_eff == pytest.approx(0.5)      # seed said 0.75
+    assert len(lin_s) == 2 and len(lin_l) == 2
+    # the compressed request obeys Eq. 15: l_in' + l_out <= b
+    assert np.all(lin_s + lout_s <= max(b, l_total[0]))
+
+    router = GatewayRouter(b_short=b, gamma=gamma, p_c=1.0, seed=0)
+    for li, lo in zip(l_in, l_out):
+        router.route(Request(l_total=int(li + lo), l_in=int(li),
+                             l_out=int(lo), category="prose"))
+    assert router.stats.alpha_observed == pytest.approx(alpha_eff)

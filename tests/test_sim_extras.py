@@ -23,6 +23,36 @@ def test_mmpp_burstier_than_poisson():
     assert cv2 > 1.1          # Poisson has CV^2 = 1
 
 
+def test_mmpp_counts_are_poisson_dispersed():
+    """Per-period arrival counts must be Poisson draws, not the
+    deterministic int(rate * period) of the seed (which understated
+    burst variance): with burst_factor=1 the process degenerates to a
+    plain Poisson process, whose windowed counts have Fano factor ~ 1."""
+    rng = np.random.default_rng(7)
+    n, lam = 100_000, 100.0
+    t = mmpp_arrivals(n, lam, rng, burst_factor=1.0, mean_period_s=0.05)
+    counts = np.histogram(t, bins=np.arange(0.0, t[-1], 1.0))[0]
+    fano = counts.var() / counts.mean()
+    assert 0.7 < fano < 1.4, fano
+    assert n / t[-1] == pytest.approx(lam, rel=0.1)
+
+
+def test_busy_window_credits_post_arrival_service():
+    """simulate_pool must count service completing after the last
+    arrival (the seed clipped it at arrivals[-1], biasing rho_hat low
+    for small pools)."""
+    from repro.sim.des import simulate_pool
+    arrivals = np.array([0.0, 1.0])
+    l_in = np.array([512.0, 512.0])
+    l_out = np.array([4.0, 4.0])       # S = (1 + 4) * 1.0 = 5 s each
+    st = simulate_pool(arrivals, l_in, l_out, c_slots=2, t_iter=1.0,
+                       t_chunk=0.1, c_chunk=512, warmup=0.0)
+    # both services start inside [0, 1] and run to t=5 and t=6; the
+    # full 10 s is credited even though it completes after the last
+    # arrival (the seed counted only the 2 s inside the window)
+    assert st.busy_time == pytest.approx(10.0)
+
+
 def test_foc_gap_negative_for_azure():
     """EXPERIMENTS §Findings 2: the Prop.-1 marginal-cost gap has no
     interior zero for Azure under the literal Eq. 3 model."""
