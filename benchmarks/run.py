@@ -19,8 +19,8 @@ def main() -> None:
                             bench_compression_latency, bench_cost_cliff,
                             bench_des_validation, bench_fleet_savings,
                             bench_foc_verification, bench_gamma_surface,
-                            bench_planner_latency, bench_prefix_cache,
-                            bench_speculative, roofline)
+                            bench_k_pool_sweep, bench_planner_latency,
+                            bench_prefix_cache, bench_speculative, roofline)
     t0 = time.time()
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -36,6 +36,7 @@ def main() -> None:
     bench_burstiness.run()            # beyond-paper: MMPP arrivals
     bench_prefix_cache.run()          # beyond-paper: negative result
     bench_speculative.run()           # beyond-paper: occupancy lever
+    bench_k_pool_sweep.run(quick=True)  # beyond-paper: K-pool fleets
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")

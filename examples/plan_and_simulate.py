@@ -1,15 +1,17 @@
 """Plan a fleet, then validate the plan against the discrete-event
-simulator — the paper's full §7 loop in one script.
+simulator — the paper's full §7 loop in one script, generalized to
+K-pool and mixed-hardware fleets.
 
 Run: PYTHONPATH=src python examples/plan_and_simulate.py [--workload azure]
+     PYTHONPATH=src python examples/plan_and_simulate.py --k 3 --mixed
 """
 import argparse
 import os
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.planner import fleetopt_plan, plan_homogeneous, \
-    plan_two_pool                                                # noqa: E402
+from repro.core.planner import (fleetopt_plan, plan_homogeneous,  # noqa: E402
+                                plan_k_pool, plan_two_pool)
 from repro.core.profiles import A100_LLAMA70B, TPU_V5E_LLAMA70B  # noqa: E402
 from repro.core.workload import get_workload                    # noqa: E402
 from repro.sim.des import FleetDES                               # noqa: E402
@@ -19,30 +21,50 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="azure",
                     choices=["azure", "lmsys", "agent-heavy"])
-    ap.add_argument("--lam", type=float, default=1000.0)
+    ap.add_argument("--lam", type=float, default=1000.0,
+                    help="arrival rate (req/s)")
     ap.add_argument("--profile", default="a100",
                     choices=["a100", "tpu-v5e"])
+    ap.add_argument("--k", type=int, default=2,
+                    help="number of pools (2 = the paper's architecture)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="let each pool pick the cheapest SKU from an "
+                         "A100 + TPU-v5e menu (heterogeneous fleet)")
     args = ap.parse_args()
     profile = A100_LLAMA70B if args.profile == "a100" else TPU_V5E_LLAMA70B
 
     w = get_workload(args.workload)
+    # Baselines (paper §7.2): one worst-case pool, then plain pool
+    # routing at the paper's evaluation boundary with no compression.
     homo = plan_homogeneous(w, args.lam, 0.5, profile)
     pr = plan_two_pool(w, args.lam, 0.5, profile, w.b_short, 1.0)
-    plan, _ = fleetopt_plan(w, args.lam, 0.5, profile)
+    # The optimized fleet.  K=2 without --mixed is exactly the paper's
+    # Algorithm 1; --k / --mixed exercise the generalized planner
+    # (sorted boundary-vector search + per-pool hardware choice).
+    if args.k == 2 and not args.mixed:
+        plan, _ = fleetopt_plan(w, args.lam, 0.5, profile)
+    elif args.mixed:
+        plan = plan_k_pool(w, args.lam, 0.5, k=args.k,
+                           profile_options=(A100_LLAMA70B, TPU_V5E_LLAMA70B))
+    else:
+        plan = plan_k_pool(w, args.lam, 0.5, profiles=profile, k=args.k)
     print(f"workload={w.name} (archetype {w.archetype})  "
-          f"profile={profile.name}")
+          f"profile={'menu(a100,tpu-v5e)' if args.mixed else profile.name}")
     print(f"  homogeneous: {homo.total_gpus} GPUs")
     print(f"  pool routing: n_s={pr.short.n_gpus} n_l={pr.long.n_gpus} "
           f"({1 - pr.total_gpus / homo.total_gpus:.1%} saving)")
     print(f"  FleetOpt    : {plan.summary()} "
-          f"({1 - plan.total_gpus / homo.total_gpus:.1%} saving)")
+          f"({1 - plan.annual_cost / homo.annual_cost:.1%} cost saving)")
 
+    # DES validation (paper Table 5 methodology): simulate the plan's
+    # boundary vector through the C&R gateway rule and compare the
+    # analytical per-pool utilization against the event-driven one.
     print("\nDES validation (paper Table 5 methodology):")
     des = FleetDES(plan, profile, w)
     for name, st in des.run(lam=args.lam, seed=4).items():
-        pool = plan.short if name == "short" else plan.long
+        pool = plan.pool(name)     # look up by name: works for any K
         err = (pool.utilization - st.utilization) / max(st.utilization, 1e-9)
-        print(f"  {name:5s}: rho_ana={pool.utilization:.3f} "
+        print(f"  {name:6s}: rho_ana={pool.utilization:.3f} "
               f"rho_des={st.utilization:.3f} err={err:+.1%} "
               f"ttft_p99={st.ttft_p99()*1e3:.0f}ms (SLO 500ms)")
 

@@ -15,7 +15,9 @@ from numpy.typing import NDArray
 
 
 def erlang_c(c: int, rho: float) -> float:
-    """P(wait) for an M/M/c queue at per-server utilization ``rho``.
+    """P(wait) for an M/M/c queue at per-server utilization ``rho``
+    (paper §3.2).  ``c`` is the slot count (servers), ``rho`` is
+    dimensionless in [0, 1); returns a probability.
 
     Numerically stable recursive/log-space form (paper Eq. 16):
         C(c, rho) = 1 / (1 + (1-rho) * sum_{k=0}^{c-1} c!/(k!) (c rho)^{k-c})
@@ -52,8 +54,12 @@ def kimura_w99(c: int, mu: float, lam: float, cs2: float) -> float:
     """P99 queue waiting time, Kimura M/G/c approximation (paper Eq. 6).
 
     W99 = ln(C(c, rho)/0.01) * (1 + Cs^2) / (2 (c mu - lam)).
-    Returns 0 when the wait probability is already below 1e-2 (the
-    many-server regime, paper §3.1/§7.4) or the queue is empty.
+
+    Units: ``c`` slots, ``mu`` req/s per slot, ``lam`` req/s into the
+    pool, ``cs2`` dimensionless (squared coefficient of variation of
+    the service time); returns seconds.  Returns 0 when the wait
+    probability is already below 1e-2 (the many-server regime, paper
+    §3.1/§7.4) or the queue is empty; +inf when rho >= 1 (unstable).
     """
     if lam <= 0:
         return 0.0
@@ -68,10 +74,11 @@ def kimura_w99(c: int, mu: float, lam: float, cs2: float) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class ServiceMoments:
-    """First two moments of the slot-occupancy time S (paper Eq. 4)."""
+    """First two moments of the slot-occupancy time S (paper Eq. 4),
+    estimated by Monte-Carlo from the routed token distributions."""
     mean: float           # E[S] seconds
-    cs2: float            # squared coefficient of variation
-    mean_iterations: float
+    cs2: float            # squared coefficient of variation, dimensionless
+    mean_iterations: float       # E[prefill chunks + decode iters]
     p99_prefill_iters: float   # P99 of ceil(L_in / C_chunk), for Eq. 8
     mean_prefill_iters: float = 0.0
 
@@ -83,7 +90,10 @@ class ServiceMoments:
 
 def service_moments(l_in: NDArray, l_out: NDArray, t_iter: float,
                     c_chunk: int = 512) -> ServiceMoments:
-    """Monte-Carlo moments of S = (ceil(L_in/C_chunk) + L_out) * t_iter."""
+    """Monte-Carlo moments of S = (ceil(L_in/C_chunk) + L_out) * t_iter
+    (paper Eq. 4).  ``l_in``/``l_out`` are token arrays drawn from the
+    workload (post-routing, i.e. per pool), ``t_iter`` seconds per
+    lockstep iteration, ``c_chunk`` tokens per prefill chunk."""
     if len(l_in) == 0:
         return ServiceMoments(mean=0.0, cs2=0.0, mean_iterations=0.0,
                               p99_prefill_iters=0.0)

@@ -21,7 +21,10 @@ COMPRESSIBLE = frozenset({"prose", "rag"})
 
 
 class PiecewiseCDF:
-    """Monotone piecewise log-linear CDF over token counts."""
+    """Monotone piecewise log-linear CDF over token counts (paper
+    §2.4): anchors are (tokens, cumulative probability) pairs, and the
+    interpolation is linear in log-token space — the shape published
+    LLM trace CDFs follow closely."""
 
     def __init__(self, anchors: Tuple[Tuple[float, float], ...]):
         xs = np.array([a[0] for a in anchors], dtype=np.float64)
@@ -83,9 +86,15 @@ class Workload:
     bytes_per_token: float = 4.0
 
     def alpha(self, b: Optional[int] = None) -> float:
+        """CDF mass at or below the boundary ``b`` (tokens): the
+        traffic fraction a short pool at ``b`` serves directly
+        (paper §2.4, Table 2).  Dimensionless in [0, 1]."""
         return float(self.cdf.cdf(b or self.b_short))
 
     def beta(self, gamma: Optional[float] = None, b: Optional[int] = None) -> float:
+        """Borderline-band mass F(gamma*b) - F(b): the traffic
+        fraction C&R can attempt to compress below ``b`` (paper §5.1,
+        Table 2).  Dimensionless."""
         b = b or self.b_short
         g = gamma or self.gamma_eval
         return float(self.cdf.cdf(g * b) - self.cdf.cdf(b))
@@ -96,7 +105,9 @@ class Workload:
         return 1.0 - self.borderline_code_frac
 
     def sample(self, n: int, seed: int = 0, lam: float = 1000.0) -> list:
-        """Draw ``n`` requests with Poisson arrivals at rate ``lam``."""
+        """Draw ``n`` :class:`Request` objects with Poisson arrivals at
+        rate ``lam`` (req/s); token counts from the CDF + output-length
+        model, categories from the per-workload mix (paper §7.1)."""
         rng = np.random.default_rng(seed)
         l_total = np.maximum(np.round(self.cdf.sample(n, rng)), 2.0)
         noise = np.exp(rng.normal(0.0, self.lout_sigma, size=n))
@@ -115,7 +126,10 @@ class Workload:
 
     def sample_arrays(self, n: int, seed: int = 0
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(l_total, l_in, l_out) arrays — fast path for moment estimation."""
+        """(l_total, l_in, l_out) token arrays — the fast path the
+        planner and DES share for service-moment estimation (same seed
+        => same draw, which is what makes planner/DES comparisons
+        noise-free)."""
         rng = np.random.default_rng(seed)
         l_total = np.maximum(np.round(self.cdf.sample(n, rng)), 2.0)
         noise = np.exp(rng.normal(0.0, self.lout_sigma, size=n))

@@ -1,9 +1,15 @@
 """Batched serving launcher: prefill + decode loop under pjit on the
-available devices (the serve-side analog of launch/train.py).
+available devices (the serve-side analog of launch/train.py), plus a
+``--fleet K`` mode that plans a K-pool fleet with the FleetOpt planner
+and spins up one gateway-routed engine per pool.
 
   PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.serve --arch minitron-8b --reduced \
       --mesh 4x2 --batch 8 --prompt-len 64 --new-tokens 16
+
+  # plan a 3-pool azure fleet and serve a mixed prompt batch through it
+  PYTHONPATH=src python -m repro.launch.serve --fleet 3 --workload azure \
+      --reduced --new-tokens 8
 """
 import argparse
 import dataclasses
@@ -18,6 +24,70 @@ from repro.distributed.context import make_context
 from repro.models import model as M
 
 
+def serve_fleet(args) -> None:
+    """Plan K pools from the workload CDF, then make the plan
+    executable: one InferenceEngine per pool behind the C&R gateway
+    (serving/pools.py), boundaries scaled down to the reduced model's
+    cache so the demo runs on CPU in seconds."""
+    from repro.core.planner import plan_k_pool
+    from repro.core.workload import get_workload
+    from repro.serving.pools import FleetRuntime, GatewayRequest
+
+    w = get_workload(args.workload)
+    plan = plan_k_pool(w, lam=args.lam, t_slo=0.5, k=args.fleet)
+    print(f"plan: {plan.summary()}")
+    for pp in plan.pools:
+        print(f"  {pp.name}: c_max={pp.c_max} n_gpus={pp.n_gpus} "
+              f"rho={pp.utilization:.3f} ttft_p99={pp.ttft_p99_s*1e3:.0f}ms")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    c_chunk = 16
+    # scale datacenter-token boundaries onto the demo model's cache
+    rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
+                                c_chunk=c_chunk,
+                                ctx_scale=512 / plan.pools[-1].c_max)
+    bounds = rt.router.boundaries
+    print(f"runtime pools: boundaries={bounds} "
+          f"gammas={rt.router.gammas} "
+          f"contexts={[e.c_max for e in rt.engines.values()]}")
+
+    def prompt(n_words: int, topic: str) -> str:
+        return " ".join(f"{topic} fact {i}: fleets split by context length."
+                        for i in range(n_words))
+
+    # one prompt per pool band + one borderline C&R candidate per boundary
+    reqs, rid = [], 0
+    for i, eng in enumerate(rt.engines.values()):
+        lo = bounds[i - 1] if i else 0
+        words = max(2, (lo + (bounds[i] if i < len(bounds) else eng.c_max))
+                    // 2 // 8)
+        reqs.append(GatewayRequest(rid, prompt(words, f"band{i}"),
+                                   args.new_tokens))
+        rid += 1
+    for i, b in enumerate(bounds):
+        reqs.append(GatewayRequest(
+            rid, prompt(max(2, int(b * 1.2) // 8), f"borderline{i}"),
+            args.new_tokens, category="rag"))
+        rid += 1
+
+    t0 = time.time()
+    for r in reqs:
+        d = rt.submit(r)
+        print(f"  req {r.rid}: {r.category:5s} -> {d.pool:6s}"
+              f"{' [C&R]' if d.compressed else ''} "
+              f"L_eff={d.l_total_effective}")
+    results = rt.run(max_iters=20_000)
+    dt = time.time() - t0
+    done = sum(len(res.output_tokens) for res in results.values())
+    s = rt.router.stats
+    print(f"served {len(results)} requests / {done} tokens in {dt:.1f}s; "
+          f"gateway: borderline={s.borderline} "
+          f"compressed={s.compressed_ok} per_pool={s.per_pool}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minitron-8b")
@@ -27,7 +97,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--fleet", type=int, default=0, metavar="K",
+                    help="plan a K-pool fleet and serve through the "
+                         "gateway (K engines) instead of the raw "
+                         "pjit decode loop")
+    ap.add_argument("--workload", default="azure",
+                    choices=["azure", "lmsys", "agent-heavy"],
+                    help="workload CDF for --fleet planning")
+    ap.add_argument("--lam", type=float, default=1000.0,
+                    help="arrival rate (req/s) for --fleet planning")
     args = ap.parse_args()
+
+    if args.fleet:
+        serve_fleet(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

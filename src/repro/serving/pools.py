@@ -1,24 +1,28 @@
-"""Two-pool serving runtime: the FleetOpt plan made executable.
+"""K-pool serving runtime: the FleetOpt plan made executable.
 
 Wires together:
-  * the planner's (n_s, n_l, B_short, gamma) output,
+  * the planner's boundary vector / gamma vector / per-pool sizing,
   * the gateway router with the extractive compressor (C&R),
-  * one InferenceEngine per pool (short pool sized for B_short tokens,
-    long pool for c_max_long).
+  * one InferenceEngine per pool (pool i sized for its boundary's
+    token budget, the top pool for c_max_long).
 
 This is the end-to-end "implementation mechanism" of the paper: the
-boundary B*_short is enforced in software at the gateway, and the hard
-OOM guarantee (Eq. 15) means no compressed request can overflow the
-short pool's KV cache.
+boundary vector B* is enforced in software at the gateway, and the
+hard OOM guarantee (Eq. 15) means no compressed request can overflow
+its target pool's KV cache.  ``TwoPoolRuntime`` is the paper's K=2
+special case; ``FleetRuntime.from_plan`` spins up N engines straight
+from a :class:`~repro.core.planner.FleetPlan`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core.compression import ExtractiveCompressor, count_tokens
-from repro.core.router import LONG, SHORT, GatewayRouter, RoutingDecision
+from repro.core.naming import pool_names
+from repro.core.planner import FleetPlan
+from repro.core.router import GatewayRouter, RoutingDecision
 from repro.core.workload import Request
 from repro.serving.engine import InferenceEngine, ServeRequest, ServeResult
 from repro.serving.tokenizer import ByteChunkTokenizer
@@ -44,23 +48,68 @@ class GatewayResponse:
     queue_iters: int
 
 
-class TwoPoolRuntime:
-    def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
-                 n_max_short: int, n_max_long: int, c_max_long: int,
+class FleetRuntime:
+    """N-pool gateway + engines.
+
+    ``boundaries`` (tokens, strictly increasing) and ``gammas`` define
+    the routing bands; ``n_maxes``/``c_maxes`` give each engine's slot
+    count and context window — pool i's ``c_maxes[i]`` must be at
+    least ``boundaries[i]`` so the no-OOM guarantee holds.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 boundaries: Sequence[int], gammas: Sequence[float],
+                 n_maxes: Sequence[int], c_maxes: Sequence[int],
                  c_chunk: int = 512):
+        k = len(boundaries) + 1
+        if len(n_maxes) != k or len(c_maxes) != k:
+            raise ValueError(f"need {k} n_maxes/c_maxes for "
+                             f"{len(boundaries)} boundaries")
+        for i, b in enumerate(boundaries):
+            if c_maxes[i] < b:
+                raise ValueError(
+                    f"pool {i} context {c_maxes[i]} < its boundary {b}: "
+                    "compressed requests could overflow the KV cache")
         self.cfg = cfg
         self.tokenizer = ByteChunkTokenizer(cfg.vocab_size)
-        self.router = GatewayRouter(b_short=b_short, gamma=gamma,
+        self.router = GatewayRouter(boundaries=boundaries, gammas=gammas,
                                     compressor=ExtractiveCompressor())
+        names = pool_names(k)
         self.engines: Dict[str, InferenceEngine] = {
-            SHORT: InferenceEngine(cfg, params, n_max_short, b_short,
-                                   c_chunk),
-            LONG: InferenceEngine(cfg, params, n_max_long, c_max_long,
-                                  c_chunk),
-        }
+            names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
+                                      c_chunk)
+            for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
 
+    @classmethod
+    def from_plan(cls, cfg: ModelConfig, params, plan: FleetPlan,
+                  slots_per_pool: int = 4, c_chunk: int = 64,
+                  ctx_scale: Optional[float] = None) -> "FleetRuntime":
+        """Build a runtime with the plan's boundary/gamma structure.
+
+        The plan's per-GPU slot counts target datacenter hardware; a
+        local runtime caps each pool at ``slots_per_pool`` engine
+        slots.  ``ctx_scale`` shrinks the token boundaries (e.g.
+        ``512 / 65536`` to demo a 64K plan on a reduced model with a
+        512-token cache); boundaries are kept >= 2 * c_chunk so the
+        chunked prefill path stays exercised.
+        """
+        scale = ctx_scale if ctx_scale is not None else 1.0
+        bounds = []
+        for b in plan.boundaries:
+            bounds.append(max(int(b * scale), 2 * c_chunk,
+                              (bounds or [0])[-1] + 1))
+        c_top = max(int(plan.pools[-1].c_max * scale),
+                    (bounds[-1] if bounds else 2 * c_chunk) * 2)
+        c_maxes = tuple(bounds) + (c_top,)
+        n_maxes = tuple(min(slots_per_pool, max(1, pp.n_max))
+                        for pp in plan.pools)
+        return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
+                   c_maxes, c_chunk)
+
     def submit(self, req: GatewayRequest) -> RoutingDecision:
+        """Route one request through the gateway and enqueue it on the
+        chosen pool's engine.  Returns the routing decision."""
         prompt_tokens = self.tokenizer.count(req.text)
         r = Request(l_total=prompt_tokens + req.max_output_tokens,
                     l_in=prompt_tokens, l_out=req.max_output_tokens,
@@ -79,10 +128,10 @@ class TwoPoolRuntime:
         return decision
 
     def run(self, max_iters: int = 100_000) -> Dict[int, GatewayResponse]:
-        """Drive both pools to completion, interleaving their lockstep
+        """Drive all pools to completion, interleaving their lockstep
         iterations (the pools are independent engines, so interleaving
         cannot change any request's tokens — but it models the real
-        deployment, where both pools serve concurrently, and keeps
+        deployment, where all pools serve concurrently, and keeps
         per-pool iteration clocks comparable)."""
         out: Dict[int, GatewayResponse] = {}
         results: Dict[int, ServeResult] = {}
@@ -104,3 +153,14 @@ class TwoPoolRuntime:
                 prefill_iters=res.prefill_iters,
                 decode_iters=res.decode_iters, queue_iters=res.queue_iters)
         return out
+
+
+class TwoPoolRuntime(FleetRuntime):
+    """The paper's two-pool runtime (K=2 view of :class:`FleetRuntime`)."""
+
+    def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
+                 n_max_short: int, n_max_long: int, c_max_long: int,
+                 c_chunk: int = 512):
+        super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
+                         n_maxes=(n_max_short, n_max_long),
+                         c_maxes=(b_short, c_max_long), c_chunk=c_chunk)

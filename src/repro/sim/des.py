@@ -1,5 +1,5 @@
 """Discrete-event fleet simulator — the inference-fleet-sim analog
-(paper §7.4, [Chen et al. 2026c]).
+(paper §7.4, [Chen et al. 2026c]) — generalized to K-pool fleets.
 
 Each pool is simulated as c = n_gpus * n_max KV slots with FIFO
 queueing; a request occupies a slot for
@@ -8,6 +8,12 @@ model the analytical planner uses — the validation checks that the
 *queueing* abstractions agree, exactly as the paper's DES does).
 Records the fraction of slot-time busy (GPU utilization rho_hat) and
 empirical queue-wait percentiles.
+
+The gateway decision rule is the vectorized mirror of
+``GatewayRouter.route`` over the plan's boundary vector: a pool-j
+request inside the band ``(B_j, gamma_j * B_j]`` compresses down one
+tier with probability p_c.  Heterogeneous plans simulate each pool
+with its own :class:`HardwareProfile` (t_iter, chunk size).
 
 Fleets at paper scale have up to ~33k slots and mean occupancies of
 minutes, so reaching steady state with a full-fleet event loop would
@@ -22,14 +28,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.core.planner import FleetPlan, PoolPlan
 from repro.core.profiles import HardwareProfile
-from repro.core.router import LONG, SHORT
-from repro.core.workload import COMPRESSIBLE, Workload
+from repro.core.workload import Workload
 
 
 @dataclasses.dataclass
@@ -145,33 +150,62 @@ def mmpp_arrivals(n: int, lam: float, rng, burst_factor: float = 1.8,
 
 
 class FleetDES:
-    """Drive a two-pool (or homogeneous) fleet from a workload through
+    """Drive a K-pool (or homogeneous) fleet from a workload through
     the C&R gateway decision rule, Poisson arrivals at rate lam (or
-    MMPP with ``arrival_process="mmpp"``)."""
+    MMPP with ``arrival_process="mmpp"``).
 
-    def __init__(self, plan: FleetPlan, profile: HardwareProfile,
-                 workload: Workload, gamma: Optional[float] = None,
+    ``profile`` is the fallback hardware when a pool plan carries none
+    (plans built by the current planner always do); ``gamma`` (scalar,
+    applied to every boundary) or ``gammas`` (per boundary) override
+    the plan's compression bandwidths — the legacy validation runs at
+    gamma=1.0 to isolate queueing error from compression noise.
+    """
+
+    def __init__(self, plan: FleetPlan, profile: Optional[HardwareProfile]
+                 = None, workload: Optional[Workload] = None,
+                 gamma: Optional[float] = None,
+                 gammas: Optional[Sequence[float]] = None,
                  max_sim_slots: int = 4096, horizon_services: float = 40.0):
+        if workload is None:
+            raise ValueError("FleetDES needs the workload to sample from")
         self.plan = plan
         self.profile = profile
         self.workload = workload
-        self.gamma = gamma if gamma is not None else plan.gamma
+        nb = len(plan.boundaries)
+        if gammas is not None:
+            if len(gammas) != nb:
+                raise ValueError("need one gamma per plan boundary")
+            self.gammas = tuple(gammas)
+        elif gamma is not None:
+            self.gammas = (gamma,) * nb
+        else:
+            self.gammas = plan.gammas
+        # legacy scalar view (first boundary's gamma)
+        self.gamma = self.gammas[0] if self.gammas else 1.0
         self.max_sim_slots = max_sim_slots
         self.horizon_services = horizon_services
+
+    def _profile_of(self, pp: PoolPlan) -> HardwareProfile:
+        prof = pp.profile or self.profile
+        if prof is None:
+            raise ValueError(f"pool {pp.name} has no hardware profile and "
+                             "no fallback was passed to FleetDES")
+        return prof
 
     def run(self, n_requests: int = 30_000, lam: float = 1000.0,
             seed: int = 0, arrival_process: str = "poisson",
             burst_factor: float = 1.8) -> Dict[str, PoolStats]:
+        """Simulate and return per-pool stats keyed by pool name
+        ("short"/"long" for K<=2, "pool{i}" for K>=3)."""
         w, plan = self.workload, self.plan
         rng = np.random.default_rng(seed)
-        pools = {}
-        if plan.short is not None and plan.short.n_gpus > 0:
-            pools[SHORT] = plan.short
-        if plan.long is not None and plan.long.n_gpus > 0:
-            pools[LONG] = plan.long
+        k = plan.k
+        active = [pp for pp in plan.pools if pp.n_gpus > 0]
+        if not active:
+            return {}
 
         # horizon long enough for the slowest pool to reach steady state
-        max_es = max(p.moments.mean for p in pools.values() if p.moments.mean)
+        max_es = max(pp.moments.mean for pp in active if pp.moments.mean)
         horizon = self.horizon_services * max_es
         n_total = max(n_requests, int(lam * horizon * 1.15))
 
@@ -180,31 +214,41 @@ class FleetDES:
             arrivals = mmpp_arrivals(n_total, lam, rng, burst_factor)
         else:
             arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_total))
-        cats = rng.uniform(size=n_total)
-        p_compressible_cat = sum(
-            v for k, v in w.category_probs.items() if k in COMPRESSIBLE)
+        rng.uniform(size=n_total)       # category draw (kept for rng parity)
 
         # vectorized gateway decision (same rule as GatewayRouter.route)
-        if SHORT in pools:
-            b = plan.b_short
-            below = l_total <= b
-            borderline = (~below) & (l_total <= self.gamma * b)
-            # borderline band: category mix per workload (code excluded)
-            ok = rng.uniform(size=n_total) < w.p_c
-            # router refuses compression when T_c = b - l_out <= 0
-            # (router.py _compress_and_route); keep the DES rule aligned
-            compressed = borderline & ok & (self.gamma > 1.0) & (l_out < b)
-            to_short = below | compressed
+        if k >= 2:
+            bvec = np.asarray(plan.boundaries, dtype=np.float64)
+            pool_idx = np.searchsorted(bvec, l_total, side="left")
             li = l_in.copy()
-            li[compressed] = np.maximum(b - l_out[compressed], 1)
-            routes = {SHORT: (to_short, li), LONG: (~to_short, l_in)}
+            # one compressibility coin per request, shared across
+            # boundaries (a request is prose/RAG or it is not)
+            ok = rng.uniform(size=n_total) < w.p_c
+            for j in range(1, k):
+                b, g = plan.boundaries[j - 1], self.gammas[j - 1]
+                # router refuses compression when T_c = b - l_out <= 0
+                # (router.py _compress_and_route); keep the DES aligned
+                elig = ((pool_idx == j) & (l_total <= g * b) & ok
+                        & (g > 1.0) & (l_out < b))
+                pool_idx[elig] = j - 1
+                li[elig] = np.maximum(b - l_out[elig], 1)
         else:
-            routes = {LONG: (np.ones(n_total, bool), l_in)}
-        del p_compressible_cat
+            pool_idx = np.zeros(n_total, dtype=np.int64)
+            li = l_in
 
+        # a pool planned at 0 GPUs cannot serve: its band escalates to
+        # the next provisioned pool ABOVE (longer context always fits;
+        # going down would overflow KV).  Traffic above the top
+        # provisioned pool is unservable and excluded from the stats.
+        for i, pp in enumerate(plan.pools[:-1]):
+            if pp.n_gpus == 0:
+                pool_idx[pool_idx == i] = i + 1
+
+        name_to_idx = {pp.name: i for i, pp in enumerate(plan.pools)}
         out: Dict[str, PoolStats] = {}
-        for name, pp in pools.items():
-            mask, li = routes[name]
+        for pp in active:
+            mask = pool_idx == name_to_idx[pp.name]
+            prof = self._profile_of(pp)
             # Poisson-thin the pool to <= max_sim_slots slots
             c_full = pp.n_gpus * pp.n_max
             thin = min(1.0, self.max_sim_slots / c_full)
@@ -212,24 +256,32 @@ class FleetDES:
             thin = c_sim / c_full
             keep = mask & (rng.uniform(size=n_total) < thin)
             idx = np.where(keep)[0]
-            out[name] = simulate_pool(
+            out[pp.name] = simulate_pool(
                 arrivals[idx], li[idx], l_out[idx],
-                c_sim, self.profile.t_iter(pp.c_max),
-                self.profile.w_ms / 1000.0, self.profile.c_chunk,
-                warmup=0.25 * horizon, name=name, n_gpus=pp.n_gpus,
+                c_sim, prof.t_iter(pp.c_max),
+                prof.w_ms / 1000.0, prof.c_chunk,
+                warmup=0.25 * horizon, name=pp.name, n_gpus=pp.n_gpus,
                 thin_frac=thin)
         return out
 
 
-def validation_table(plan: FleetPlan, profile: HardwareProfile,
-                     workload: Workload, gamma: float = 1.0,
-                     seed: int = 0) -> list:
-    """Paper Table 5: analytical vs DES utilization per pool."""
-    des = FleetDES(plan, profile, workload, gamma=gamma)
+def validation_table(plan: FleetPlan, profile: Optional[HardwareProfile]
+                     = None, workload: Optional[Workload] = None,
+                     gamma: Optional[float] = 1.0, seed: int = 0,
+                     gammas: Optional[Sequence[float]] = None) -> list:
+    """Paper Table 5: analytical vs DES utilization, one row per pool.
+
+    ``gamma`` defaults to 1.0 (the paper's validation isolates the
+    queueing model from compression); pass ``gamma=None`` to simulate
+    at the plan's own gamma vector, or ``gammas`` for per-boundary
+    control.  Error is (rho_ana - rho_des) / rho_des, dimensionless.
+    """
+    des = FleetDES(plan, profile, workload, gamma=gamma, gammas=gammas)
     stats = des.run(seed=seed)
+    by_name = {pp.name: pp for pp in plan.pools}
     rows = []
     for name, ps in stats.items():
-        pp: PoolPlan = plan.short if name == SHORT else plan.long
+        pp = by_name[name]
         rho_ana = pp.utilization
         rho_hat = ps.utilization
         rows.append({

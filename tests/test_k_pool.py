@@ -1,0 +1,326 @@
+"""K-pool generalization: exact K=2 equivalence with the legacy
+two-pool planner, K=3 mixed-hardware DES validation, router/planner
+split parity over the whole boundary vector, the derived cliff-table
+interior row, re-plan latency, and an end-to-end smoke of the
+quickstart example + K-pool benchmark."""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cost import cliff_table, k_pool_savings, pool_cliff_ratios
+from repro.core.planner import (Infeasible, _draw, _split_k, draw_samples,
+                                fleetopt_plan, plan_homogeneous, plan_k_pool,
+                                plan_two_pool, pool_names)
+from repro.core.profiles import A100_LLAMA70B, TPU_V5E_LLAMA70B
+from repro.core.router import GatewayRouter
+from repro.core.workload import Request, get_workload
+from repro.sim.des import validation_table
+
+LAM, SLO = 1000.0, 0.5
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------- K=2 parity
+
+@pytest.mark.parametrize("name", ["azure", "lmsys", "agent-heavy"])
+def test_k2_fixed_point_bit_for_bit(name):
+    """plan_k_pool at a fixed (B, gamma) IS the legacy two-pool plan:
+    every field — GPU counts, utilizations, moments, cost — matches
+    exactly (same code path, dataclass equality is bitwise here)."""
+    w = get_workload(name)
+    legacy = plan_two_pool(w, LAM, SLO, A100_LLAMA70B, w.b_short, 1.5)
+    k2 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                     boundaries=(w.b_short,), gammas=(1.5,))
+    assert k2 == legacy
+    assert (k2.short.n_gpus, k2.long.n_gpus) == \
+        (legacy.short.n_gpus, legacy.long.n_gpus)
+    assert k2.annual_cost == legacy.annual_cost
+
+
+@pytest.mark.parametrize("name", ["azure", "lmsys", "agent-heavy"])
+def test_k2_search_matches_fleetopt(name):
+    """The K=2 boundary search reproduces Algorithm 1's optimum
+    (same B*, gamma*, n_s, n_l, cost) on every workload."""
+    w = get_workload(name)
+    fo, _ = fleetopt_plan(w, LAM, SLO, A100_LLAMA70B)
+    k2 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, k=2)
+    assert k2 == fo
+    assert (k2.b_short, k2.gamma) == (fo.b_short, fo.gamma)
+
+
+def test_k1_is_homogeneous():
+    w = get_workload("azure")
+    homo = plan_homogeneous(w, LAM, SLO, A100_LLAMA70B)
+    k1 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, k=1)
+    assert k1 == homo
+    assert k1.short is None and k1.long.n_gpus == homo.total_gpus
+    assert k1.alpha_eff == 0.0
+
+
+def test_k_pool_validates_input():
+    w = get_workload("azure")
+    with pytest.raises(ValueError):
+        plan_k_pool(w, LAM, SLO, boundaries=(4096, 2048), gammas=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        plan_k_pool(w, LAM, SLO, boundaries=(4096,), gammas=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        plan_k_pool(w, LAM, SLO)           # neither boundaries nor k
+    with pytest.raises(ValueError):
+        plan_k_pool(w, LAM, SLO, boundaries=(65536,), gammas=(1.0,))
+    with pytest.raises(ValueError):
+        plan_k_pool(w, LAM, SLO, boundaries=(2048, 8192), gammas=(1.0, 1.0),
+                    profiles=(A100_LLAMA70B,) * 2)   # K=3 needs 3 profiles
+
+
+# --------------------------------------------------- K=3 planner behaviour
+
+def test_k3_never_worse_than_k2_at_nested_boundaries():
+    """Adding a boundary can only refine the split: at the K=2
+    optimum's boundary plus any interior one, total cost is <= the
+    K=2 cost with the same gamma policy off (gamma=1)."""
+    w = get_workload("agent-heavy")
+    s = draw_samples(w)
+    k2 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                     boundaries=(w.b_short,), gammas=(1.0,), samples=s)
+    k3 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                     boundaries=(4096, w.b_short), samples=s)
+    assert k3.k == 3 and len(k3.pools) == 3
+    assert k3.annual_cost <= k2.annual_cost * 1.02   # refinement, small slack
+    assert [p.name for p in k3.pools] == ["pool0", "pool1", "pool2"]
+    # pool contexts are the boundary budgets + worst case
+    assert [p.c_max for p in k3.pools] == [4096, w.b_short, 65536]
+
+
+def test_k3_mixed_hardware_per_pool_profiles():
+    w = get_workload("azure")
+    profs = (TPU_V5E_LLAMA70B, A100_LLAMA70B, A100_LLAMA70B)
+    plan = plan_k_pool(w, LAM, SLO, profiles=profs,
+                       boundaries=(2048, 4096), gammas=(1.0, 1.0))
+    assert [p.profile.name for p in plan.pools] == \
+        [p.name for p in profs]
+    # cost is the per-pool sum over heterogeneous SKU prices
+    expect = sum(p.profile.annual_cost(p.n_gpus) for p in plan.pools)
+    assert plan.annual_cost == pytest.approx(expect)
+
+
+def test_profile_options_pick_cheapest_per_pool():
+    """With a hardware menu, each pool independently picks the cheaper
+    feasible SKU — at least as cheap as either homogeneous choice."""
+    w = get_workload("lmsys")
+    s = draw_samples(w)
+    kw = dict(boundaries=(w.b_short,), gammas=(1.5,), samples=s)
+    mixed = plan_k_pool(w, LAM, SLO, profile_options=(
+        A100_LLAMA70B, TPU_V5E_LLAMA70B), **kw)
+    a100 = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, **kw)
+    tpu = plan_k_pool(w, LAM, SLO, profiles=TPU_V5E_LLAMA70B, **kw)
+    assert mixed.annual_cost <= min(a100.annual_cost, tpu.annual_cost)
+
+
+# ------------------------------------------------------- DES validation K=3
+
+def test_k3_mixed_des_validation_within_3pct():
+    """Paper Table 5 methodology on a K=3 mixed A100+TPU-v5e plan:
+    the analytical utilization must agree with the DES within 3% on
+    every pool (the planner's acceptance gate for the generalization)."""
+    w = get_workload("azure")
+    plan = plan_k_pool(w, LAM, SLO,
+                       profiles=(TPU_V5E_LLAMA70B, TPU_V5E_LLAMA70B,
+                                 A100_LLAMA70B),
+                       boundaries=(2048, 4096), gammas=(1.0, 1.0))
+    rows = validation_table(plan, workload=w, gamma=1.0, seed=3)
+    assert len(rows) == 3
+    for r in rows:
+        assert abs(r["error"]) <= 0.03, r
+
+
+def test_k3_des_with_compression_shifts_traffic_down():
+    """With gammas > 1 the DES moves borderline traffic down one tier
+    at each boundary (alpha' > alpha per pool)."""
+    from repro.sim.des import FleetDES
+    w = get_workload("azure")
+    plan = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                       boundaries=(2048, 4096), gammas=(1.5, 1.5))
+    des = FleetDES(plan, workload=w)     # plan's own gammas
+    stats = des.run(seed=5)
+    assert set(stats) == {"pool0", "pool1", "pool2"}
+    served = {n: s.served / s.thin_frac for n, s in stats.items()}
+    frac0 = served["pool0"] / sum(served.values())
+    # alpha(2048)=0.728; C&R at gamma=1.5 pushes pool0 share above it
+    assert frac0 > w.alpha(2048)
+
+
+# ------------------------------------------------------ router/split parity
+
+def test_router_split_parity_every_boundary():
+    """GatewayRouter over a boundary vector agrees with the planner's
+    _split_k on the destination pool of EVERY request (p_c=1 so both
+    are deterministic), for each boundary in the vector."""
+    from repro.core.planner import _Samples
+    w = get_workload("azure")
+    boundaries, gammas = (1024, 4096), (1.5, 1.8)
+    n = 4000
+    l_total, l_in, l_out = w.sample_arrays(n, seed=7)
+    s = _Samples(l_total, l_in, l_out, compressible=np.ones(n, bool))
+    per_pool, fracs = _split_k(s, boundaries, gammas)
+
+    router = GatewayRouter(boundaries=boundaries, gammas=gammas,
+                           p_c=1.0, seed=0)
+    for lt, li, lo in zip(l_total, l_in, l_out):
+        router.route(Request(l_total=int(lt), l_in=int(li), l_out=int(lo),
+                             category="prose"))
+    names = pool_names(len(boundaries) + 1)
+    for i, name in enumerate(names):
+        assert router.stats.per_pool.get(name, 0) == len(per_pool[i][0]), \
+            f"pool {name}: router disagrees with planner split"
+    assert router.stats.total == n
+    # planner alpha_eff (traffic below top pool) matches router counts
+    assert 1.0 - fracs[-1] == pytest.approx(
+        1.0 - router.stats.per_pool.get(names[-1], 0) / n)
+
+
+def test_router_k2_legacy_equivalence():
+    """The boundary-vector constructor with one boundary behaves
+    exactly like the legacy (b_short, gamma) router."""
+    a = GatewayRouter(b_short=4096, gamma=1.5, p_c=1.0, seed=0)
+    b = GatewayRouter(boundaries=(4096,), gammas=(1.5,), p_c=1.0, seed=0)
+    for li, lo, cat in ((1000, 100, "prose"), (4500, 200, "prose"),
+                        (4500, 200, "code"), (10000, 500, "prose"),
+                        (500, 4200, "prose")):
+        r = Request(l_total=li + lo, l_in=li, l_out=lo, category=cat)
+        da, db = a.route(r), b.route(r)
+        assert (da.pool, da.compressed, da.l_in_effective) == \
+            (db.pool, db.compressed, db.l_in_effective)
+    assert a.stats == b.stats
+
+
+def test_router_legacy_ctor_honours_gammas():
+    """Passing gammas with the legacy b_short ctor must not be
+    silently overridden by the scalar gamma default — and a wrong
+    gamma-vector length must raise on BOTH constructor paths."""
+    r = GatewayRouter(b_short=4096, gammas=(1.1,), p_c=1.0, seed=0)
+    assert r.gammas == (1.1,) and r.gamma == 1.1
+    # 4700 is outside the (4096, 4505.6] band at gamma=1.1 -> long
+    d = r.route(Request(l_total=4700, l_in=4500, l_out=200,
+                        category="prose"))
+    assert d.pool == "long" and not d.compressed
+    with pytest.raises(ValueError):
+        GatewayRouter(b_short=4096, gammas=(1.1, 1.5))
+    with pytest.raises(ValueError):
+        GatewayRouter(boundaries=(4096,), gammas=(1.1, 1.5))
+
+
+def test_des_escalates_zero_gpu_pool_band():
+    """A band whose pool was planned at 0 GPUs must be served by the
+    next provisioned pool above in the DES, not silently dropped."""
+    import dataclasses
+    from repro.sim.des import FleetDES
+    w = get_workload("azure")
+    plan = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                       boundaries=(2048, 4096), gammas=(1.0, 1.0))
+    starved = dataclasses.replace(
+        plan, pools=(plan.pools[0],
+                     dataclasses.replace(plan.pools[1], n_gpus=0),
+                     plan.pools[2]))
+    base = FleetDES(plan, workload=w).run(seed=2)
+    merged = FleetDES(starved, workload=w).run(seed=2)
+    assert set(merged) == {"pool0", "pool2"}
+
+    # compare TRAFFIC FRACTIONS (the two runs pick different horizons,
+    # so absolute counts differ); thinning rescales served -> arrivals
+    def fracs(stats):
+        tot = {n: s.served / s.thin_frac for n, s in stats.items()}
+        z = sum(tot.values())
+        return {n: v / z for n, v in tot.items()}
+
+    fb, fm = fracs(base), fracs(merged)
+    # pool2 absorbs exactly pool1's band on top of its own share
+    assert fm["pool2"] == pytest.approx(fb["pool2"] + fb["pool1"], rel=0.02)
+
+
+def test_router_one_tier_compression_only():
+    """A pool-2 request never compresses into pool 0 even when its
+    l_total would fit under gamma_1 * B_1 (one-tier rule)."""
+    router = GatewayRouter(boundaries=(1000, 10000), gammas=(2.0, 2.0),
+                           p_c=1.0, seed=0)
+    # natural pool 2 (l_total > 10000), within gamma*B_2 band -> pool1
+    d = router.route(Request(l_total=12000, l_in=11800, l_out=200,
+                             category="prose"))
+    assert d.pool == "pool1" and d.compressed
+    assert d.l_in_effective + 200 <= 10000
+    # natural pool 1, beyond gamma_1*B_1=2000 -> stays pool1 uncompressed
+    d = router.route(Request(l_total=5000, l_in=4900, l_out=100,
+                             category="prose"))
+    assert d.pool == "pool1" and not d.compressed
+
+
+# ------------------------------------------------------------- cost model
+
+def test_cliff_table_interior_derived():
+    """Interior illustration rows must lie strictly inside
+    (b_short + 1, c_max_long) for ANY boundary (the seed hard-coded
+    l=12000, which falls below the boundary for b_short >= 12288)."""
+    for b in (1536, 4096, 8192, 12288, 16384, 32768):
+        rows = cliff_table(A100_LLAMA70B, b_short=b)
+        ls = [r.l_total for r in rows]
+        assert ls == sorted(set(ls)), f"rows not increasing for B={b}: {ls}"
+        assert ls[0] == b and ls[1] == b + 1 and ls[-1] == 65536
+        for r in rows:
+            assert r.pool == ("short" if r.l_total <= b else "long")
+        interior = [l for l in ls if b + 1 < l < 65536]
+        assert interior, f"no interior long-pool row for B={b}"
+
+
+def test_k_pool_savings_reduces_to_two_pool():
+    from repro.core.cost import pool_routing_savings
+    rhos = pool_cliff_ratios((A100_LLAMA70B, A100_LLAMA70B), (8192, 65536))
+    assert rhos == [8.0, 1.0]
+    assert k_pool_savings((0.9, 0.1), rhos) == pytest.approx(
+        pool_routing_savings(0.9, 8.0))
+    with pytest.raises(ValueError):
+        k_pool_savings((0.5,), (8.0, 1.0))
+
+
+# ------------------------------------------------------------------ latency
+
+def test_k_pool_replan_latency_under_10ms():
+    """Acceptance: fixed-boundary-vector re-plan < 10 ms for K <= 4
+    with precomputed Monte-Carlo samples (the online re-plan path)."""
+    w = get_workload("agent-heavy")
+    s = draw_samples(w)
+    bounds = (2048, 4096, 16384)
+    gam = (1.5, 1.5, 1.5)
+    plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, boundaries=bounds,
+                gammas=gam, samples=s)      # warm
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, boundaries=bounds,
+                    gammas=gam, samples=s)
+    assert (time.perf_counter() - t0) / reps < 0.010
+
+
+# ----------------------------------------------------------- e2e smoke (CI)
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cmd", [
+    ("examples/quickstart.py",),
+    ("examples/plan_and_simulate.py", "--workload", "lmsys"),
+    ("benchmarks/bench_k_pool_sweep.py", "--quick"),
+])
+def test_examples_and_sweep_run_end_to_end(cmd):
+    """The README's quickstart and the K-pool benchmark must run as
+    written (subprocess, fresh interpreter) so docs can't silently rot."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    res = subprocess.run(
+        [sys.executable, os.path.join(ROOT, cmd[0]), *cmd[1:]],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert res.returncode == 0, \
+        f"{cmd[0]} failed:\n{res.stdout[-2000:]}\n{res.stderr[-2000:]}"
+    assert res.stdout.strip(), "expected output"
