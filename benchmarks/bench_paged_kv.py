@@ -1,0 +1,196 @@
+"""Paged vs dense KV cache: effective slots per GPU and engine
+throughput (beyond-paper; DESIGN.md §Paged KV cache).
+
+Two measurements:
+
+1. **Effective slots per GPU at equal HBM** — analytical, at paper
+   scale: for each workload (lmsys / azure / agent-heavy) and each of
+   the two pools of its evaluation split (short @ b_short, long @
+   64K), the dense slot count n_max(c_max) vs the paged slot count
+   n_max_paged(E[L_total | pool]). The ratio is the capacity the dense
+   layout wastes on empty KV tail — the runtime mirror of the paper's
+   cost-cliff tables (a short request in the long pool no longer pins
+   64K tokens of HBM).
+
+2. **Engine throughput** — measured, reduced model on CPU: the serving
+   engine's decode path dense vs paged at the SAME slot count (per-step
+   overhead of the block indirection, acceptance: within 10%), and
+   paged at 2x slots / equal HBM (the packed configuration the slot
+   ratio licenses — tokens/sec per "GPU" uplift). Output-token parity
+   dense vs paged is asserted on the same stream.
+
+Writes benchmarks/results/paged_kv_*.csv and the repo-root
+``BENCH_paged_kv.json`` perf-trajectory record.
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np                                               # noqa: E402
+
+from benchmarks.common import emit                               # noqa: E402
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_paged_kv.json")
+C_MAX_LONG = 65536
+
+
+def _slot_rows(block_size: int = 16, tail_margin_blocks: int = 2):
+    from repro.core.profiles import A100_LLAMA70B
+    from repro.core.workload import get_workload
+    rows = []
+    for wname in ("lmsys", "azure", "agent-heavy"):
+        w = get_workload(wname)
+        l_total, _, _ = w.sample_arrays(200_000, seed=0)
+        for pool, c_max in (("short", w.b_short), ("long", C_MAX_LONG)):
+            sel = l_total <= w.b_short if pool == "short" \
+                else l_total > w.b_short
+            mean_tok = float(l_total[sel].mean()) if sel.any() else c_max
+            n_dense = A100_LLAMA70B.n_max(c_max)
+            n_paged = A100_LLAMA70B.n_max_paged(mean_tok, block_size,
+                                                tail_margin_blocks)
+            rows.append({
+                "workload": wname, "pool": pool, "c_max": c_max,
+                "mean_tokens": round(mean_tok, 1),
+                "slots_dense": n_dense, "slots_paged": n_paged,
+                "ratio": round(n_paged / n_dense, 2),
+                "t_iter_dense_ms": round(A100_LLAMA70B.t_iter(c_max) * 1e3,
+                                         2),
+                "t_iter_paged_ms": round(
+                    A100_LLAMA70B.t_iter_paged(mean_tok, block_size,
+                                               tail_margin_blocks) * 1e3, 2),
+            })
+    return rows
+
+
+def _make_stream(n_req: int, max_new: int, seed: int = 0,
+                 l_in_max: int = 40):
+    """Short-mix stream: worst case l_in + max_new stays well under
+    c_max — the regime where paging packs extra slots into the HBM a
+    dense layout would burn on empty tail (ISSUE motivation: a short
+    request in the long pool)."""
+    from repro.serving.engine import ServeRequest
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_req):
+        l_in = int(rng.integers(4, l_in_max))
+        reqs.append(ServeRequest(rid=rid,
+                                 tokens=list(rng.integers(1, 900, l_in)),
+                                 max_new_tokens=max_new))
+    return reqs
+
+
+def _drive_decode(eng, reqs, n_steps: int):
+    """Fill every slot past prefill, then time ``n_steps`` PURE decode
+    iterations (compiles excluded, no slot finishes inside the window —
+    the steady-state decode hot path the within-10% criterion is
+    about). Tokens/sec = live slots * steps/sec. Drains the engine so
+    the same instance (and its compiled traces) is reusable for the
+    next repeat."""
+    for r in reqs:
+        eng.submit(r)
+    # advance until every submitted request is decoding (jit now warm)
+    for _ in range(200):
+        eng.step()
+        if not eng.waiting and all(
+                not eng.slot_prefill_left[s] for s in range(eng.n_max)
+                if eng.slot_req[s] is not None):
+            break
+    live = sum(r is not None for r in eng.slot_req)
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        eng.step()
+    dt = time.perf_counter() - t0
+    assert not eng.results, "a request finished inside the timed window"
+    eng.run_to_completion(100_000)
+    eng.results.clear()
+    steps_s = n_steps / dt
+    return steps_s, steps_s * live
+
+
+def _engine_rows(quick: bool):
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serving.engine import InferenceEngine
+    import dataclasses
+    cfg = dataclasses.replace(get_config("llama3-70b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_steps = 8 if quick else 16
+    max_new = 24        # worst case l_in + max_new <= 64 tok = 4 blocks
+    n_max, c_max, c_chunk, bs = 4, 128, 16, 16
+    blocks_equal_hbm = n_max * (c_max // bs)     # dense HBM in blocks
+
+    def fresh(paged, n_slots):
+        return InferenceEngine(cfg, params, n_max=n_slots, c_max=c_max,
+                               c_chunk=c_chunk, paged=paged, block_size=bs,
+                               num_blocks=blocks_equal_hbm if paged
+                               else None)
+
+    configs = (("dense", False, n_max),
+               ("paged", True, n_max),
+               ("paged-2x-slots", True, 2 * n_max))
+    engines = {name: fresh(paged, n) for name, paged, n in configs}
+    best = {name: (0.0, 0.0) for name, _, _ in configs}
+    # CPU wall clock drifts between runs: reuse each engine's compiled
+    # traces across repeats and interleave the configs round-robin so
+    # background load hits all three equally; keep the best window.
+    repeats = 2 if quick else 5
+    for rep in range(repeats):
+        for name, _, n_slots in configs:
+            best[name] = max(best[name], _drive_decode(
+                engines[name],
+                _make_stream(n_slots, max_new=max_new, seed=rep),
+                n_steps))
+    rows = [{"engine": name, "slots": n_slots,
+             "kv_blocks": blocks_equal_hbm if paged else "-",
+             "steps_per_s": round(best[name][0], 2),
+             "decode_tok_per_s": round(best[name][1], 2)}
+            for name, paged, n_slots in configs]
+
+    # output-token parity on a mixed continuous-batching stream
+    results = {}
+    for name, paged in (("dense", False), ("paged", True)):
+        eng = fresh(paged, n_max)
+        for r in _make_stream(2 * n_max, max_new=12, seed=7):
+            eng.submit(r)
+        results[name] = {k: v.output_tokens
+                         for k, v in eng.run_to_completion(5000).items()}
+    parity = results["dense"] == results["paged"]
+    return rows, parity
+
+
+def run(quick: bool = False) -> dict:
+    slot_rows = _slot_rows()
+    emit("paged_kv_slots_per_gpu", slot_rows)
+    eng_rows, parity = _engine_rows(quick)
+    emit("paged_kv_engine", eng_rows)
+    by = {r["engine"]: r for r in eng_rows}
+    overhead = by["paged"]["steps_per_s"] / by["dense"]["steps_per_s"]
+    uplift = by["paged-2x-slots"]["decode_tok_per_s"] \
+        / by["dense"]["decode_tok_per_s"]
+    record = {
+        "slots_per_gpu": slot_rows,
+        "min_slot_ratio": min(r["ratio"] for r in slot_rows),
+        "engine": {"rows": eng_rows,
+                   "paged_steps_vs_dense": round(overhead, 3),
+                   "packed_tok_s_vs_dense": round(uplift, 3),
+                   "token_parity": bool(parity)},
+        "quick": quick,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# paged KV: min slots ratio {record['min_slot_ratio']}x, "
+          f"paged decode steps/s = {overhead:.2f}x dense, "
+          f"2x-slot tokens/s = {uplift:.2f}x dense, parity={parity} "
+          f"-> {os.path.basename(ROOT_JSON)}")
+    return record
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

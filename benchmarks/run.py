@@ -1,9 +1,15 @@
 """Benchmark harness: one function per paper table + roofline summary.
 
-Run: PYTHONPATH=src python -m benchmarks.run
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 (the roofline tables need benchmarks/results/dryrun/*.json from
 ``python -m repro.launch.dryrun``; they are skipped if absent).
+
+``--quick`` is the CI smoke tier: the cheap analytic sweeps plus the
+paged-KV and K-pool benchmarks in their reduced configurations. Both
+tiers refresh the repo-root ``BENCH_paged_kv.json`` perf-trajectory
+record.
 """
+import argparse
 import os
 import sys
 import time
@@ -12,16 +18,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     from benchmarks import (bench_arch_cliff, bench_arrival_sweep,
                             bench_borderline, bench_burstiness,
                             bench_compression_fidelity,
                             bench_compression_latency, bench_cost_cliff,
                             bench_des_validation, bench_fleet_savings,
                             bench_foc_verification, bench_gamma_surface,
-                            bench_k_pool_sweep, bench_planner_latency,
-                            bench_prefix_cache, bench_speculative, roofline)
+                            bench_k_pool_sweep, bench_paged_kv,
+                            bench_planner_latency, bench_prefix_cache,
+                            bench_speculative, roofline)
     t0 = time.time()
+    if quick:
+        bench_cost_cliff.run()              # paper Table 1 (analytic)
+        bench_borderline.run()              # paper Table 2 (analytic)
+        bench_k_pool_sweep.run(quick=True)  # K-pool fleets, CI grid
+        bench_paged_kv.run(quick=True)      # paged KV, CI sizes
+        print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
+              "CSVs in benchmarks/results/, BENCH_paged_kv.json at root")
+        return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
     bench_fleet_savings.run()         # paper Table 3
@@ -37,6 +52,7 @@ def main() -> None:
     bench_prefix_cache.run()          # beyond-paper: negative result
     bench_speculative.run()           # beyond-paper: occupancy lever
     bench_k_pool_sweep.run(quick=True)  # beyond-paper: K-pool fleets
+    bench_paged_kv.run()              # beyond-paper: paged KV cache
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")
@@ -50,4 +66,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: analytic tables + reduced paged-KV "
+                         "and K-pool benches")
+    main(ap.parse_args().quick)

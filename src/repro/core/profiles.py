@@ -11,10 +11,13 @@ from its KV bytes/token.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.configs.base import ModelConfig
 
 HOURS_PER_YEAR = 8760.0
+DEFAULT_KV_BLOCK = 16          # tokens per paged KV block (vLLM default)
+DEFAULT_TAIL_MARGIN_BLOCKS = 2  # per-slot reserve above the mean
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +54,64 @@ class HardwareProfile:
 
     def kv_bytes_per_slot(self, c_max: int) -> int:
         return c_max * self.kv_bytes_per_token
+
+    # -- paged KV variants (DESIGN.md §Paged KV cache) ---------------------
+    def _paged_slot_tokens(self, mean_tokens: float,
+                           block_size: int = DEFAULT_KV_BLOCK,
+                           tail_margin_blocks: int =
+                           DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+        """Expected KV tokens a paged slot pins: E[L_total] rounded up
+        to whole blocks plus a tail-margin block reserve (the paged
+        analog of the planner's tail_margin — absorbs length-mix
+        drift without re-planning)."""
+        blocks = math.ceil(max(mean_tokens, 1.0) / block_size) \
+            + tail_margin_blocks
+        return blocks * block_size
+
+    def n_max_paged(self, mean_tokens: float,
+                    block_size: int = DEFAULT_KV_BLOCK,
+                    tail_margin_blocks: int =
+                    DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+        """Concurrent slots per GPU with a PAGED KV cache.
+
+        The dense layout divides the HBM token budget (n_ref * c_ref)
+        by the pool's worst case ``c_max`` (Eq. 15's hard boundary);
+        paging divides it by the pool's ACTUAL expected occupancy
+        E[L_total] + margin — turning n_max from a worst-case constant
+        into a function of the length mix (the runtime analog of the
+        paper's hard-boundary -> software-parameter move).
+        ``mean_tokens`` is the pool-conditional E[L_total] in tokens.
+        """
+        if self.context_free_slots:
+            return self.n_ref
+        budget = self.n_ref * self.c_ref          # HBM budget, tokens
+        per_slot = self._paged_slot_tokens(mean_tokens, block_size,
+                                           tail_margin_blocks)
+        return max(1, int(budget / per_slot))
+
+    def kv_bytes_per_slot_paged(self, mean_tokens: float,
+                                block_size: int = DEFAULT_KV_BLOCK,
+                                tail_margin_blocks: int =
+                                DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+        return self._paged_slot_tokens(mean_tokens, block_size,
+                                       tail_margin_blocks) \
+            * self.kv_bytes_per_token
+
+    def t_iter_paged(self, mean_tokens: float,
+                     block_size: int = DEFAULT_KV_BLOCK,
+                     tail_margin_blocks: int =
+                     DEFAULT_TAIL_MARGIN_BLOCKS) -> float:
+        """Iteration latency (s) at full PAGED occupancy: same Eq. 3
+        shape, but n is the paged slot count and — when H models the
+        per-slot KV read — each slot streams only its actual ~E[L]
+        tokens, not c_max. More slots per iteration, each cheaper."""
+        n = self.n_max_paged(mean_tokens, block_size, tail_margin_blocks)
+        h = self.h_ms_per_slot
+        if self.h_scales_with_context:
+            h = h * (self._paged_slot_tokens(mean_tokens, block_size,
+                                             tail_margin_blocks)
+                     / self.c_ref)
+        return (self.w_ms + h * n) / 1000.0
 
     def annual_cost(self, n_gpus: int) -> float:
         return n_gpus * self.cost_per_hour * HOURS_PER_YEAR

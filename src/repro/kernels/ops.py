@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.gqa_decode import gqa_decode as _gqa_pallas
+from repro.kernels.paged_decode import paged_gqa_decode as _paged_pallas
 from repro.kernels.textrank import textrank_pallas
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -23,6 +24,14 @@ def gqa_decode(q, k_cache, v_cache, valid, active=None, block_s: int = 512):
     decode this step (their output is exactly zero)."""
     return _gqa_pallas(q, k_cache, v_cache, valid, active, block_s=block_s,
                        interpret=INTERPRET)
+
+
+def paged_gqa_decode(q, k_pages, v_pages, block_tables, seq_lens,
+                     active=None):
+    """Paged flash-decode attention over a block-table-indexed KV pool;
+    see kernels/paged_decode.py. Inactive rows return exact zeros."""
+    return _paged_pallas(q, k_pages, v_pages, block_tables, seq_lens,
+                         active, interpret=INTERPRET)
 
 
 def textrank_scores(sim: np.ndarray, damping: float = 0.85,

@@ -22,6 +22,22 @@ def gqa_decode_ref(q, k_cache, v_cache, valid):
     return o.reshape(b, h * hd).astype(q.dtype)
 
 
+def paged_gqa_decode_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Paged decode oracle: gather each slot's blocks into a contiguous
+    row through the block table, then run the dense reference.
+
+    q: (B,H,hd); k_pages/v_pages: (P, BLOCK_S, Hkv, hd) physical block
+    pool; block_tables: (B, NB) int32; seq_lens: (B,) valid tokens.
+    -> (B, H*hd)."""
+    b, nb = block_tables.shape
+    block_s = k_pages.shape[1]
+    bt = jnp.clip(block_tables, 0, k_pages.shape[0] - 1)
+    k = k_pages[bt].reshape(b, nb * block_s, *k_pages.shape[2:])
+    v = v_pages[bt].reshape(b, nb * block_s, *v_pages.shape[2:])
+    valid = jnp.arange(nb * block_s)[None, :] < seq_lens[:, None]
+    return gqa_decode_ref(q, k, v, valid)
+
+
 def textrank_ref(sim, damping: float = 0.85, iters: int = 30):
     """sim: (N, N) unpadded similarity matrix. -> (N,) PageRank."""
     n = sim.shape[0]

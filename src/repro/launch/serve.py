@@ -48,7 +48,8 @@ def serve_fleet(args) -> None:
     # scale datacenter-token boundaries onto the demo model's cache
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
-                                ctx_scale=512 / plan.pools[-1].c_max)
+                                ctx_scale=512 / plan.pools[-1].c_max,
+                                paged=args.paged)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
@@ -106,6 +107,9 @@ def main():
                     help="workload CDF for --fleet planning")
     ap.add_argument("--lam", type=float, default=1000.0,
                     help="arrival rate (req/s) for --fleet planning")
+    ap.add_argument("--paged", action="store_true",
+                    help="--fleet engines use the paged KV cache "
+                         "(block-table allocator; same output tokens)")
     args = ap.parse_args()
 
     if args.fleet:

@@ -367,6 +367,119 @@ def _scatter_slot(cache, new, slot, active=None):
         onehot[:, :, None, None] * new[:, None]
 
 
+# -- paged KV cache ---------------------------------------------------------
+def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, num_blocks: int,
+                        block_size: int, dtype=None) -> Params:
+    """Paged KV cache: a shared pool of ``num_blocks`` physical blocks
+    of ``block_size`` tokens each, per layer. No per-slot rows exist —
+    slots own blocks through a host-side block table (serving engine).
+    Layout (n_layers, num_blocks, block_size, Hkv, hd) keeps the
+    per-token tail identical to the contiguous cache, so the gather
+    ``pages[block_table]`` reproduces a dense row bit-for-bit."""
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError("paged KV cache is fp-only for now "
+                                  "(int8 scales need a paged layout too)")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _paged_flat(pages):
+    """(P, BLOCK_S, Hkv, hd) -> (P * BLOCK_S, Hkv, hd) token view."""
+    p, bs = pages.shape[0], pages.shape[1]
+    return pages.reshape(p * bs, *pages.shape[2:]), p, bs
+
+
+def paged_scatter_tokens(pages, new, flat_idx):
+    """Scatter per-token K/V entries into the physical block pool.
+
+    pages: (P, BLOCK_S, Hkv, hd); new: (N, Hkv, hd); flat_idx: (N,)
+    flattened physical token index (phys_block * BLOCK_S + offset).
+    Out-of-range indices are DROPPED — the masking mechanism: inactive
+    rows / padding tokens carry index P*BLOCK_S and the pool stays
+    bit-identical (the continuous-batching invariant, paged edition).
+    """
+    flat, p, bs = _paged_flat(pages)
+    flat = flat.at[flat_idx].set(new, mode="drop")
+    return flat.reshape(pages.shape)
+
+
+def gather_pages(pages, block_tables):
+    """Materialize per-slot contiguous rows from the block pool:
+    (P, BLOCK_S, Hkv, hd) x (B, NB) -> (B, NB*BLOCK_S, Hkv, hd).
+    Entry j of a row is the slot's absolute position j, exactly the
+    dense cache layout, so downstream attention math is unchanged."""
+    b, nb = block_tables.shape
+    bs = pages.shape[1]
+    bt = jnp.clip(block_tables, 0, pages.shape[0] - 1)
+    return pages[bt].reshape(b, nb * bs, *pages.shape[2:])
+
+
+def paged_decode_attention(p: Params, cfg: ModelConfig, x, kv,
+                           block_tables, pos, decode_impl: str = "xla",
+                           active=None):
+    """Single-token decode against a paged KV cache (one layer's block
+    pool). x: (B,1,D); kv: {"k","v"} (P, BLOCK_S, Hkv, hd);
+    block_tables: (B, NB) int32; pos: (B,) absolute position of the new
+    token. Math is identical to :func:`decode_attention` on the
+    gathered pages, so paged decode reproduces dense decode
+    token-for-token. Returns (out, new_kv)."""
+    b = x.shape[0]
+    p_blocks, bs = kv["k"].shape[0], kv["k"].shape[1]
+    nb = block_tables.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    q, k, v = _qkv(p, cfg, x, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    logical = jnp.clip(pos // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    flat_idx = phys * bs + pos % bs
+    if active is not None:
+        flat_idx = jnp.where(active, flat_idx, p_blocks * bs)   # dropped
+    new_kv = {"k": paged_scatter_tokens(kv["k"], k[:, 0], flat_idx),
+              "v": paged_scatter_tokens(kv["v"], v[:, 0], flat_idx)}
+    if decode_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.paged_gqa_decode(q[:, 0], new_kv["k"], new_kv["v"],
+                                    block_tables, pos + 1, active)
+        out = out.reshape(b, 1, -1)
+    else:
+        k_all = gather_pages(new_kv["k"], block_tables)
+        v_all = gather_pages(new_kv["v"], block_tables)
+        valid = jnp.arange(nb * bs)[None, :] <= pos[:, None]
+        out = _sdpa(q, k_all, v_all, valid[:, None, :], cfg.q_per_kv)
+    return out @ p["wo"], new_kv
+
+
+def write_chunk_kv_paged(kv: Params, k, v, block_tables, start,
+                         lengths) -> Params:
+    """Paged analog of :func:`write_chunk_kv`: write one prefill chunk
+    per batch row into the block pool through the block table, one
+    per-block dynamic scatter instead of a contiguous row update.
+
+    kv: {"k","v"} (P, BLOCK_S, Hkv, hd); k/v: (B, L, Hkv, hd) new
+    entries; start: (B,) first absolute position; lengths: (B,) valid
+    tokens (0 => bitwise no-op row). Padding tokens scatter to the
+    out-of-range index and are dropped."""
+    b, l = k.shape[:2]
+    p_blocks, bs = kv["k"].shape[0], kv["k"].shape[1]
+    nb = block_tables.shape[1]
+    pos = start[:, None] + jnp.arange(l)[None, :]             # (B, L)
+    logical = jnp.clip(pos // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, L)
+    flat = phys * bs + pos % bs
+    valid = jnp.arange(l)[None, :] < lengths[:, None]
+    flat = jnp.where(valid, flat, p_blocks * bs).reshape(-1)
+    new_k = paged_scatter_tokens(kv["k"], k.reshape(b * l, *k.shape[2:]),
+                                 flat)
+    new_v = paged_scatter_tokens(kv["v"], v.reshape(b * l, *v.shape[2:]),
+                                 flat)
+    return {"k": new_k, "v": new_v}
+
+
 # -- chunked prefill (batched multi-slot) -----------------------------------
 def write_chunk_kv(kv: Params, k, v, start, lengths) -> Params:
     """Blend-write one prefill chunk per batch row into contiguous KV

@@ -409,6 +409,121 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Params:
+    """Paged KV cache: one shared pool of ``num_blocks`` physical
+    blocks per layer (models/layers.init_paged_kv_cache). No batch
+    axis exists — slots own blocks via the engine's block tables, so
+    HBM scales with the ACTUAL length mix, not batch * c_max.
+
+    Supported for the contiguous-cache attention families (dense/MoE,
+    full attention, fp KV) — the paper's serving model (Llama-3-70B).
+    """
+    if cfg.family not in (DENSE, MOE) or cfg.mla is not None:
+        raise NotImplementedError(
+            "paged KV cache supports dense/MoE full-attention models; "
+            f"family={cfg.family!r} mla={cfg.mla is not None}")
+    if cfg.attention_window:
+        raise NotImplementedError(
+            "windowed attention already bounds KV by the window; paging "
+            "it would page a ring buffer — unsupported")
+    return {"kv": L.init_paged_kv_cache(cfg, cfg.num_layers, num_blocks,
+                                        block_size)}
+
+
+def paged_decode_step(params: Params, cfg: ModelConfig, token,
+                      cache: Params, block_tables, pos, parallel=None,
+                      decode_impl: str = "xla", active=None
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """Paged analog of :func:`decode_step` (dense/MoE branch). token:
+    (B,1) int32; block_tables: (B, NB) int32; pos: (B,) per-row
+    positions. Math matches decode_step on the gathered pages, so the
+    paged engine reproduces dense output tokens exactly. ``active``
+    rows with False are provable bitwise no-ops on the block pool."""
+    x = params["embed"][token]
+    pos = jnp.asarray(pos, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    def body(x, inp):
+        lp, kv = inp
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, new = L.paged_decode_attention(lp["attn"], cfg, h, kv,
+                                          block_tables, pos,
+                                          decode_impl=decode_impl,
+                                          active=active)
+        x = x + a
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            if parallel is None:
+                m, _ = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+            else:
+                m, _ = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h, parallel,
+                                                 mode="psum")
+            x = x + m
+        else:
+            x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, new
+
+    x, kv = _scan(body, x, (params["layers"], cache["kv"]))
+    cache = dict(cache, kv=kv)
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, 0], cache
+
+
+def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens,
+                        cache: Params, block_tables, start_pos, lengths,
+                        parallel=None) -> Tuple[jnp.ndarray, Params]:
+    """Paged analog of the fused sequence-level chunk prefill
+    (:func:`_prefill_chunk_fused`): write the chunk's K/V through the
+    block table (per-block dynamic scatter), then attend chunk queries
+    over (gathered pages) causally. Same shapes/semantics as
+    :func:`prefill_chunk`; rows with lengths == 0 are bitwise no-ops
+    on the block pool."""
+    b, l = tokens.shape
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    x = params["embed"][tokens]                          # (B, L, D)
+    positions = start_pos[:, None] + jnp.arange(l)[None, :]
+
+    def body(x, inp):
+        lp, kv = inp
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], cfg, h, h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kv = L.write_chunk_kv_paged(kv, k, v, block_tables, start_pos,
+                                    lengths)
+        k_all = L.gather_pages(kv["k"], block_tables)
+        v_all = L.gather_pages(kv["v"], block_tables)
+        s_max = k_all.shape[1]
+        valid = jnp.arange(s_max)[None, None, :] <= positions[:, :, None]
+        a = L._sdpa(q, k_all, v_all, valid, cfg.q_per_kv)
+        x = x + a @ lp["attn"]["wo"]
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            if parallel is None:
+                m, _ = MOE_MOD.moe_block(lp["moe"], cfg, h, None)
+            else:
+                m, _ = MOE_MOD.moe_block_sharded(lp["moe"], cfg, h, parallel,
+                                                 mode="a2a")
+            x = x + m
+        else:
+            x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, kv
+
+    x, kv = _scan(body, x, (params["layers"], cache["kv"]))
+    cache = dict(cache, kv=kv)
+    last = jnp.clip(lengths - 1, 0, l - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, 0], cache
+
+
 def prefill(params: Params, cfg: ModelConfig, batch: Dict,
             parallel=None, window: Optional[int] = None
             ) -> Tuple[jnp.ndarray, Params]:

@@ -19,14 +19,35 @@ The step path is FIXED-SHAPE (see DESIGN.md §Engine):
     iteration (batched multi-slot prefill with in-place
     dynamic_update_slice on the batched cache), not one call per slot.
 
+The KV cache comes in two layouts (DESIGN.md §Paged KV cache):
+
+  * DENSE (default, bitwise-pinned): one contiguous ``(n_max, c_max)``
+    row per slot — every slot pins worst-case KV for its lifetime.
+  * PAGED (``paged=True``): one shared pool of fixed-size blocks plus
+    a per-slot block table. A request only ever pins
+    ceil((L_in + L_out_max)/block) blocks — ITS worst case, not the
+    pool's — so at equal HBM the engine runs many more live slots
+    (profiles.n_max_paged). A host-side free list allocates blocks on
+    admit/chunk/decode; admission control refuses to place a request
+    whose worst-case blocks the free list cannot cover, which makes
+    mid-flight preemption unnecessary for correctness. Paged mode
+    reproduces dense output tokens exactly on the same request stream.
+
+Both jitted step functions DONATE the cache pytree (donate_argnums):
+without donation XLA keeps the input and output cache alive across
+every step — a 2x HBM tax on exactly the resource this engine
+economizes. (CPU ignores donation; on TPU the buffer is reused.)
+
 The engine is functional at the device boundary: all device state lives
-in ``self.cache`` (a pytree) and is updated by jit'd steps. Slot
-bookkeeping (which request occupies which slot) is host-side — exactly
-the split a production gateway/engine pair has.
+in ``self.cache`` (a pytree) and is updated by jit'd steps. Slot and
+block bookkeeping (which request occupies which slot, which physical
+blocks it owns) is host-side — exactly the split a production
+gateway/engine pair has.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -35,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.models import model as M
 
 
@@ -74,7 +96,9 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, n_max: int, c_max: int,
                  c_chunk: int = 512, eos_id: Optional[int] = None,
-                 decode_impl: str = "xla"):
+                 decode_impl: str = "xla", paged: bool = False,
+                 block_size: int = DEFAULT_KV_BLOCK,
+                 num_blocks: Optional[int] = None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
@@ -86,7 +110,32 @@ class InferenceEngine:
         self.c_chunk = min(c_chunk, c_max)
         self.buckets = prefill_buckets(self.c_chunk)
         self.eos_id = eos_id
-        self.cache = M.init_cache(cfg, n_max, c_max)
+        self.paged = paged
+        if paged:
+            self.block_size = block_size
+            # logical blocks per slot: enough to address c_max tokens
+            self.blocks_per_slot = math.ceil(c_max / block_size)
+            # default pool: equal HBM with the dense layout (n_max
+            # worst-case rows); callers exploiting paging pass a larger
+            # n_max at the same num_blocks (profiles.n_max_paged).
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else n_max * self.blocks_per_slot)
+            self.cache = M.init_paged_cache(cfg, self.num_blocks,
+                                            block_size)
+            # host-side allocator state (free list + per-slot tables)
+            self._free: List[int] = list(range(self.num_blocks))
+            self._reserved = 0          # worst-case blocks not yet alloc'd
+            self.block_tables = np.zeros((n_max, self.blocks_per_slot),
+                                         np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(n_max)]
+            self._slot_worst = [0] * n_max
+            # device copy of the block table, refreshed only when the
+            # allocator touches it (steady-state decode crosses a block
+            # boundary once per block_size tokens — re-uploading every
+            # step would put a host->device copy on the hot path)
+            self._bt_device = None
+        else:
+            self.cache = M.init_cache(cfg, n_max, c_max)
         # per-slot host state
         self.slot_req: List[Optional[ServeRequest]] = [None] * n_max
         self.slot_pos = np.zeros(n_max, np.int32)        # next position
@@ -101,10 +150,21 @@ class InferenceEngine:
         self._prefill_iters: Dict[int, int] = {}
         # buckets that actually compiled a prefill trace this lifetime
         self.prefill_buckets_used: Set[int] = set()
-        self._decode = jax.jit(partial(self._decode_fn, decode_impl))
-        # NOT static in chunk length: the bucketed token array's shape
-        # selects the trace, so traces are bounded by len(self.buckets)
-        self._prefill_step = jax.jit(partial(self._prefill_fn, decode_impl))
+        # donate_argnums=1: the cache pytree is consumed by each step
+        # and its buffer reused for the output (no 2x HBM residency)
+        if paged:
+            self._decode = jax.jit(partial(self._paged_decode_fn,
+                                           decode_impl), donate_argnums=1)
+            self._prefill_step = jax.jit(self._paged_prefill_fn,
+                                         donate_argnums=1)
+        else:
+            self._decode = jax.jit(partial(self._decode_fn, decode_impl),
+                                   donate_argnums=1)
+            # NOT static in chunk length: the bucketed token array's shape
+            # selects the trace, so traces are bounded by len(self.buckets)
+            self._prefill_step = jax.jit(partial(self._prefill_fn,
+                                                 decode_impl),
+                                         donate_argnums=1)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
@@ -116,6 +176,17 @@ class InferenceEngine:
 
     def utilization_snapshot(self) -> float:
         return sum(r is not None for r in self.slot_req) / self.n_max
+
+    def free_block_count(self) -> int:
+        """Unallocated physical blocks (paged mode)."""
+        return len(self._free) if self.paged else 0
+
+    def kv_tokens_held(self) -> int:
+        """Tokens of KV memory currently pinned: paged counts only the
+        allocated blocks; dense pins c_max per occupied slot."""
+        if self.paged:
+            return sum(len(b) for b in self._slot_blocks) * self.block_size
+        return sum(r is not None for r in self.slot_req) * self.c_max
 
     def run_to_completion(self, max_iters: int = 100_000) -> Dict[int, ServeResult]:
         while self.busy() and self.iteration < max_iters:
@@ -138,7 +209,18 @@ class InferenceEngine:
         }
 
     def cache_row(self, s: int):
-        """Host copy of slot ``s``'s cache row (testing / debugging)."""
+        """Host copy of slot ``s``'s cache row (testing / debugging).
+        In paged mode the row is materialized through the block table
+        (unallocated logical blocks read physical block 0 — garbage
+        beyond the slot's length, exactly like a dense row)."""
+        if self.paged:
+            idx = np.array(self.block_tables[s], np.int32)
+
+            def gather(a):
+                arr = np.asarray(a)          # (L, P, bs, Hkv, hd)
+                out = arr[:, idx]            # (L, NB, bs, Hkv, hd)
+                return out.reshape(arr.shape[0], -1, *arr.shape[3:])
+            return jax.tree.map(gather, self.cache)
         return jax.tree.map(
             lambda a: np.asarray(
                 jax.lax.index_in_dim(a, s, self._batch_axis(a),
@@ -159,30 +241,103 @@ class InferenceEngine:
             chunks[s] = self.slot_prefill_left[s][: self.c_chunk]
             self.slot_prefill_left[s] = self.slot_prefill_left[s][self.c_chunk:]
         if chunks:
+            if self.paged:
+                for s, chunk in chunks.items():
+                    self._ensure_blocks(s, int(self.slot_pos[s]) + len(chunk))
             self._run_prefill_chunks(chunks)
         decode_mask = np.array(
             [self.slot_req[s] is not None and s not in chunks
              and not self.slot_prefill_left[s] for s in range(self.n_max)],
             bool)
         if decode_mask.any():
+            if self.paged:
+                for s in np.where(decode_mask)[0]:
+                    self._ensure_blocks(int(s), int(self.slot_pos[s]) + 1)
             self._run_decode(decode_mask)
 
     # ------------------------------------------------------------ internals
+    def _worst_case_blocks(self, req: ServeRequest) -> int:
+        return math.ceil((len(req.tokens) + req.max_new_tokens)
+                         / self.block_size)
+
+    def _refuse(self, req: ServeRequest) -> None:
+        """Refuse the FIFO head: empty result, no leaked host entries."""
+        self.waiting.pop(0)
+        self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0)
+        self._enqueued_at.pop(req.rid, None)
+        self._queue_iters.pop(req.rid, None)
+
     def _admit(self) -> None:
         for s in range(self.n_max):
-            if self.slot_req[s] is None and self.waiting:
-                req = self.waiting.pop(0)
+            if self.slot_req[s] is not None:
+                continue
+            while self.waiting:
+                req = self.waiting[0]
                 if len(req.tokens) + req.max_new_tokens > self.c_max:
                     # gateway guarantees this never happens (Eq. 15); a
-                    # direct-submitted oversized request is refused.
-                    self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0)
+                    # direct-submitted oversized request is refused —
+                    # WITHOUT consuming this slot's admit chance (the
+                    # next waiting request gets the slot this same
+                    # iteration), and without leaking its host entries.
+                    self._refuse(req)
                     continue
+                if self.paged:
+                    need = self._worst_case_blocks(req)
+                    if need > self.num_blocks:
+                        # can NEVER be covered (pool smaller than the
+                        # request's worst case): refuse like oversized,
+                        # or the FIFO head would defer forever
+                        self._refuse(req)
+                        continue
+                    if need > len(self._free) - self._reserved:
+                        # Admission control (DESIGN.md §Paged KV cache):
+                        # the free list cannot cover this request's
+                        # worst-case blocks. It stays queued (FIFO:
+                        # later requests must not jump it) until
+                        # completions return blocks — the invariant
+                        # that makes mid-flight preemption unnecessary.
+                        return
+                    self._reserved += need
+                    self._slot_worst[s] = need
+                self.waiting.pop(0)
                 self.slot_req[s] = req
                 self.slot_pos[s] = 0
                 self.slot_prefill_left[s] = list(req.tokens)
                 self.slot_out[s] = []
                 self._queue_iters[req.rid] = \
-                    self.iteration - self._enqueued_at[req.rid]
+                    self.iteration - self._enqueued_at.pop(req.rid)
+                break
+
+    def _ensure_blocks(self, s: int, tokens_needed: int) -> None:
+        """Allocate physical blocks for slot ``s`` until it covers
+        ``tokens_needed`` positions. Admission reserved the worst case,
+        so the free list can never run dry here (asserted)."""
+        blocks = self._slot_blocks[s]
+        while len(blocks) * self.block_size < tokens_needed:
+            assert self._free, "free list exhausted despite reservation"
+            phys = self._free.pop()
+            self._reserved -= 1
+            self.block_tables[s, len(blocks)] = phys
+            blocks.append(phys)
+            self._bt_device = None
+
+    def _block_table_device(self):
+        """Device block table, re-uploaded only after allocator writes
+        (snapshot semantics: np.array copy, never a live alias)."""
+        if self._bt_device is None:
+            self._bt_device = jnp.asarray(np.array(self.block_tables))
+        return self._bt_device
+
+    def _release_slot(self, s: int) -> None:
+        """Return slot ``s``'s blocks to the free list and drop its
+        unused reservation (request finished early / at its cap)."""
+        blocks = self._slot_blocks[s]
+        self._free.extend(blocks)
+        self._reserved -= self._slot_worst[s] - len(blocks)
+        self._slot_blocks[s] = []
+        self._slot_worst[s] = 0
+        self.block_tables[s, :] = 0
+        self._bt_device = None
 
     def _prefill_fn(self, decode_impl, params, cache, tokens, start_pos,
                     lengths):
@@ -191,6 +346,12 @@ class InferenceEngine:
         _, cache = M.prefill_chunk(params, self.cfg, tokens, cache,
                                    start_pos, lengths,
                                    decode_impl=decode_impl)
+        return cache
+
+    def _paged_prefill_fn(self, params, cache, tokens, block_tables,
+                          start_pos, lengths):
+        _, cache = M.paged_prefill_chunk(params, self.cfg, tokens, cache,
+                                         block_tables, start_pos, lengths)
         return cache
 
     def _run_prefill_chunks(self, chunks: Dict[int, List[int]]) -> None:
@@ -206,9 +367,15 @@ class InferenceEngine:
         # and dispatch is async, so passing the live (mutated-below)
         # array would race the device read
         start = np.array(self.slot_pos, np.int32)
-        self.cache = self._prefill_step(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(start), jnp.asarray(lengths))
+        if self.paged:
+            self.cache = self._prefill_step(
+                self.params, self.cache, jnp.asarray(tokens),
+                self._block_table_device(), jnp.asarray(start),
+                jnp.asarray(lengths))
+        else:
+            self.cache = self._prefill_step(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(start), jnp.asarray(lengths))
         for s, chunk in chunks.items():
             rid = self.slot_req[s].rid
             self.slot_pos[s] += len(chunk)
@@ -230,13 +397,28 @@ class InferenceEngine:
                                       decode_impl=decode_impl, active=active)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    def _paged_decode_fn(self, decode_impl, params, cache, tokens,
+                         block_tables, pos, active):
+        logits, cache = M.paged_decode_step(params, self.cfg, tokens, cache,
+                                            block_tables, pos,
+                                            decode_impl=decode_impl,
+                                            active=active)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
     def _run_decode(self, mask: np.ndarray) -> None:
         # snapshot host state (see _run_prefill_chunks: async dispatch
         # must never observe the in-place updates below)
         toks = jnp.asarray(np.array(self.slot_last_tok[:, None]))
         pos = jnp.asarray(np.array(self.slot_pos))
-        next_tok, self.cache = self._decode(self.params, self.cache,
-                                            toks, pos, jnp.asarray(mask))
+        if self.paged:
+            next_tok, self.cache = self._decode(self.params, self.cache,
+                                                toks,
+                                                self._block_table_device(),
+                                                pos, jnp.asarray(mask))
+        else:
+            next_tok, self.cache = self._decode(self.params, self.cache,
+                                                toks, pos,
+                                                jnp.asarray(mask))
         next_tok = np.asarray(next_tok)
         for s in np.where(mask)[0]:
             req = self.slot_req[s]
@@ -249,7 +431,9 @@ class InferenceEngine:
             if done:
                 self.results[req.rid] = ServeResult(
                     rid=req.rid, output_tokens=self.slot_out[s],
-                    prefill_iters=self._prefill_iters.get(req.rid, 0),
+                    prefill_iters=self._prefill_iters.pop(req.rid, 0),
                     decode_iters=len(self.slot_out[s]),
-                    queue_iters=self._queue_iters.get(req.rid, 0))
+                    queue_iters=self._queue_iters.pop(req.rid, 0))
                 self.slot_req[s] = None
+                if self.paged:
+                    self._release_slot(int(s))

@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.core.compression import ExtractiveCompressor, count_tokens
 from repro.core.naming import pool_names
 from repro.core.planner import FleetPlan
+from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.core.router import GatewayRouter, RoutingDecision
 from repro.core.workload import Request
 from repro.serving.engine import InferenceEngine, ServeRequest, ServeResult
@@ -60,7 +61,8 @@ class FleetRuntime:
     def __init__(self, cfg: ModelConfig, params,
                  boundaries: Sequence[int], gammas: Sequence[float],
                  n_maxes: Sequence[int], c_maxes: Sequence[int],
-                 c_chunk: int = 512):
+                 c_chunk: int = 512, paged: bool = False,
+                 kv_block_size: int = DEFAULT_KV_BLOCK):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -75,16 +77,22 @@ class FleetRuntime:
         self.router = GatewayRouter(boundaries=boundaries, gammas=gammas,
                                     compressor=ExtractiveCompressor())
         names = pool_names(k)
+        # paged=True gives every engine a block-pool KV cache (same HBM
+        # as the dense rows by default; see engine num_blocks) — output
+        # tokens are identical either way, only residency changes.
         self.engines: Dict[str, InferenceEngine] = {
             names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
-                                      c_chunk)
+                                      c_chunk, paged=paged,
+                                      block_size=kv_block_size)
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
 
     @classmethod
     def from_plan(cls, cfg: ModelConfig, params, plan: FleetPlan,
                   slots_per_pool: int = 4, c_chunk: int = 64,
-                  ctx_scale: Optional[float] = None) -> "FleetRuntime":
+                  ctx_scale: Optional[float] = None,
+                  paged: bool = False,
+                  kv_block_size: int = DEFAULT_KV_BLOCK) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -105,7 +113,8 @@ class FleetRuntime:
         n_maxes = tuple(min(slots_per_pool, max(1, pp.n_max))
                         for pp in plan.pools)
         return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
-                   c_maxes, c_chunk)
+                   c_maxes, c_chunk, paged=paged,
+                   kv_block_size=kv_block_size)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -160,7 +169,9 @@ class TwoPoolRuntime(FleetRuntime):
 
     def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
                  n_max_short: int, n_max_long: int, c_max_long: int,
-                 c_chunk: int = 512):
+                 c_chunk: int = 512, paged: bool = False,
+                 kv_block_size: int = DEFAULT_KV_BLOCK):
         super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
-                         c_maxes=(b_short, c_max_long), c_chunk=c_chunk)
+                         c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
+                         paged=paged, kv_block_size=kv_block_size)

@@ -33,7 +33,9 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.core.planner import FleetPlan, PoolPlan
-from repro.core.profiles import HardwareProfile
+from repro.core.profiles import (DEFAULT_KV_BLOCK,
+                                 DEFAULT_TAIL_MARGIN_BLOCKS,
+                                 HardwareProfile)
 from repro.core.workload import Workload
 
 
@@ -165,7 +167,10 @@ class FleetDES:
                  = None, workload: Optional[Workload] = None,
                  gamma: Optional[float] = None,
                  gammas: Optional[Sequence[float]] = None,
-                 max_sim_slots: int = 4096, horizon_services: float = 40.0):
+                 max_sim_slots: int = 4096, horizon_services: float = 40.0,
+                 paged: bool = False,
+                 kv_block_size: int = DEFAULT_KV_BLOCK,
+                 tail_margin_blocks: int = DEFAULT_TAIL_MARGIN_BLOCKS):
         if workload is None:
             raise ValueError("FleetDES needs the workload to sample from")
         self.plan = plan
@@ -184,6 +189,13 @@ class FleetDES:
         self.gamma = self.gammas[0] if self.gammas else 1.0
         self.max_sim_slots = max_sim_slots
         self.horizon_services = horizon_services
+        # paged=True re-derives each pool's per-GPU slot count from the
+        # pool-conditional E[L_total] (profiles.n_max_paged) instead of
+        # the plan's worst-case n_max(c_max) — the DES view of the
+        # paged serving engine at identical HBM.
+        self.paged = paged
+        self.kv_block_size = kv_block_size
+        self.tail_margin_blocks = tail_margin_blocks
 
     def _profile_of(self, pp: PoolPlan) -> HardwareProfile:
         prof = pp.profile or self.profile
@@ -246,11 +258,22 @@ class FleetDES:
 
         name_to_idx = {pp.name: i for i, pp in enumerate(plan.pools)}
         out: Dict[str, PoolStats] = {}
+        l_tok = li + l_out              # post-compression KV occupancy
         for pp in active:
             mask = pool_idx == name_to_idx[pp.name]
             prof = self._profile_of(pp)
+            if self.paged:
+                mean_tok = (float(l_tok[mask].mean()) if mask.any()
+                            else float(pp.c_max))
+                n_slot = prof.n_max_paged(mean_tok, self.kv_block_size,
+                                          self.tail_margin_blocks)
+                t_it = prof.t_iter_paged(mean_tok, self.kv_block_size,
+                                         self.tail_margin_blocks)
+            else:
+                n_slot = pp.n_max
+                t_it = prof.t_iter(pp.c_max)
             # Poisson-thin the pool to <= max_sim_slots slots
-            c_full = pp.n_gpus * pp.n_max
+            c_full = pp.n_gpus * n_slot
             thin = min(1.0, self.max_sim_slots / c_full)
             c_sim = max(1, int(round(c_full * thin)))
             thin = c_sim / c_full
@@ -258,7 +281,7 @@ class FleetDES:
             idx = np.where(keep)[0]
             out[pp.name] = simulate_pool(
                 arrivals[idx], li[idx], l_out[idx],
-                c_sim, prof.t_iter(pp.c_max),
+                c_sim, t_it,
                 prof.w_ms / 1000.0, prof.c_chunk,
                 warmup=0.25 * horizon, name=pp.name, n_gpus=pp.n_gpus,
                 thin_frac=thin)
