@@ -7,8 +7,8 @@ import numpy as np
 
 from benchmarks.bench_compression_latency import synth_prompt
 from benchmarks.common import emit
-from repro.core.compression import (ExtractiveCompressor, count_tokens,
-                                    rouge_l_recall, tfidf_cosine)
+from repro.core.compression import (ExtractiveCompressor, rouge_l_recall,
+                                    tfidf_cosine)
 
 PAPER = {"p_c": 1.00, "rouge_l": 0.856, "tfidf_cos": 0.981,
          "reduction_pct": 15.4}

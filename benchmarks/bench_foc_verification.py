@@ -9,8 +9,6 @@ We evaluate both sides by central finite differences on the Erlang-C
 inversion at every candidate B (gamma=1, Azure), and check that the
 sign of the difference flips exactly where the swept cost curve has
 its minimum — the discrete analog of the FOC."""
-import numpy as np
-
 from benchmarks.common import emit
 from repro.core import planner as PL
 from repro.core.profiles import A100_LLAMA70B

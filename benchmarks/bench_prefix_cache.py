@@ -1,31 +1,54 @@
-"""Beyond-paper: prefix caching as a provisioning lever.
+"""Prefix caching: analytic fleet sizing AND measured engine numbers.
 
-The paper's LMSYS workload is multi-turn with ACCUMULATED context —
-every turn resubmits the whole history. A gateway/engine prefix cache
-with hit rate h removes h of the prompt's prefill iterations from the
-slot-occupancy time (KV memory per slot is unchanged, so n_max and the
-cliff are unchanged):
+NOTE (ISSUE 4): this bench now reports MEASURED engine numbers — the
+ref-counted prefix cache over the paged KV pool (serving/engine.py) is
+driven with shared-prefix streams at hit rates 0 / 0.5 / 0.9 and we
+record blocks allocated per request, TTFT iterations, and steps/s,
+prefix cache on vs off. The analytic section below is kept as-is.
+
+Analytic part (original finding, unchanged): the paper's LMSYS workload
+is multi-turn with ACCUMULATED context — every turn resubmits the whole
+history. A gateway/engine prefix cache with hit rate h removes h of the
+prompt's prefill iterations from the slot-occupancy time:
 
     E[S] = (ceil((1-h) L_in / C_chunk) + L_out) * t_iter.
 
-This bench sizes the pool-routing fleet at several hit rates. The
-RESULT IS NEGATIVE (and informative): with realistic output lengths,
-slot occupancy is dominated by decode iterations (L_out >> prefill
-chunks), so even an 80 % hit rate shrinks the fleet by ~0-1.3 %.
-Prefix caching is a TTFT lever, not a capacity lever, under the
-paper's service model — unlike C&R, whose savings come from the slot
-COUNT side (n_max), not the occupancy side. See EXPERIMENTS §Findings."""
-import numpy as np
+Sizing the pool-routing fleet at several hit rates stays a NEGATIVE
+capacity result (slot occupancy is decode-dominated, so even 80 % hit
+shrinks the fleet by ~0-1.3 %) — prefix caching is a TTFT and KV-
+RESIDENCY lever, not a GPU-count lever, under the paper's service
+model. The measured section quantifies exactly those two wins: with a
+0.9-hit agent-style mix the engine allocates ~5x fewer fresh KV blocks
+per request and reaches its first token ~an order of magnitude earlier,
+while steps/s stays flat (hashing is host-side, off the jit path).
 
-from benchmarks.common import emit
-from repro.core import planner as PL
-from repro.core.profiles import A100_LLAMA70B
-from repro.core.workload import get_workload
+Writes benchmarks/results/prefix_cache*.csv and the repo-root
+``BENCH_prefix_cache.json`` perf-trajectory record.
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit                               # noqa: E402
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_prefix_cache.json")
+
+BLOCK = 16
+HIT_RATES = (0.0, 0.5, 0.9)
 
 
-def run(lam: float = 1000.0, t_slo: float = 0.5):
+# ----------------------------------------------------------- analytic table
+def analytic_rows(lam: float = 1000.0, t_slo: float = 0.5):
+    from repro.core import planner as PL
+    from repro.core.profiles import A100_LLAMA70B
+    from repro.core.workload import get_workload
     rows = []
-    for name in ("lmsys", "azure"):
+    for name in ("lmsys", "azure", "agent-heavy"):
         w = get_workload(name)
         s = PL._draw(w)
         base_total = None
@@ -46,9 +69,118 @@ def run(lam: float = 1000.0, t_slo: float = 0.5):
                 "mean_prefill_iters_s": round(
                     short.moments.mean_prefill_iters, 2),
             })
-    emit("prefix_cache", rows)
     return rows
 
 
+# --------------------------------------------------------- measured engine
+def _session_stream(n_req: int, l_in: int, hit: float, max_new: int,
+                    seed: int):
+    """Agent-style mix: every request resubmits a shared history
+    (``hit`` fraction of its prompt, block-aligned) plus a unique
+    suffix — the multi-turn accumulated-context pattern."""
+    import numpy as np
+    from repro.serving.engine import ServeRequest
+    rng = np.random.default_rng(seed)
+    n_prefix = int(round(hit * l_in / BLOCK)) * BLOCK
+    prefix = list(rng.integers(1, 900, n_prefix))
+    reqs = []
+    for rid in range(n_req):
+        suffix = list(rng.integers(1, 900, l_in - n_prefix))
+        reqs.append(ServeRequest(rid=rid, tokens=prefix + suffix,
+                                 max_new_tokens=max_new))
+    return reqs, prefix
+
+
+def _drive(eng, reqs, warmup_req):
+    """Serve one warm-up turn (populates the prefix cache — the steady
+    state of a live agent session), then the measured stream. Returns
+    (blocks/req, mean TTFT iters, steps/s, peak KV tokens held)."""
+    import numpy as np
+    eng.submit(warmup_req)
+    eng.run_to_completion(10_000)
+    eng.results.clear()
+    alloc0 = eng.prefix_stats["allocated_blocks"]
+    for r in reqs:
+        eng.submit(r)
+    peak_held = 0
+    it0, t0 = eng.iteration, time.perf_counter()
+    while eng.busy() and eng.iteration < 100_000:
+        eng.step()
+        peak_held = max(peak_held, eng.kv_tokens_held())
+    dt = time.perf_counter() - t0
+    steps = eng.iteration - it0
+    res = eng.results
+    ttft = np.mean([res[r.rid].queue_iters + res[r.rid].prefill_iters + 1
+                    for r in reqs])
+    blocks_per_req = (eng.prefix_stats["allocated_blocks"] - alloc0) \
+        / len(reqs)
+    eng.assert_block_invariants()
+    return blocks_per_req, float(ttft), steps / dt, peak_held // BLOCK
+
+
+def engine_rows(quick: bool):
+    import dataclasses
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serving.engine import InferenceEngine, ServeRequest
+    cfg = dataclasses.replace(get_config("llama3-70b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 8 if quick else 16
+    l_in, max_new = 160, 8
+    n_max, c_max, c_chunk = 4, 256, 16
+    rows = []
+    for hit in HIT_RATES:
+        reqs, prefix = _session_stream(n_req, l_in, hit, max_new, seed=3)
+        warm = ServeRequest(rid=10_000, tokens=list(prefix) + [901, 902],
+                            max_new_tokens=2)
+        for enabled in (False, True):
+            eng = InferenceEngine(cfg, params, n_max=n_max, c_max=c_max,
+                                  c_chunk=c_chunk, paged=True,
+                                  block_size=BLOCK, prefix_cache=enabled)
+            blocks, ttft, steps_s, peak = _drive(eng, reqs, warm)
+            rows.append({
+                "prefix_hit_rate": hit,
+                "prefix_cache": "on" if enabled else "off",
+                "blocks_per_req": round(blocks, 2),
+                "ttft_iters": round(ttft, 2),
+                "steps_per_s": round(steps_s, 2),
+                "peak_blocks_held": peak,
+                "hit_blocks": eng.prefix_stats["hit_blocks"],
+            })
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    a_rows = analytic_rows()
+    emit("prefix_cache", a_rows)
+    e_rows = engine_rows(quick)
+    emit("prefix_cache_engine", e_rows)
+    by = {(r["prefix_hit_rate"], r["prefix_cache"]): r for r in e_rows}
+    on, off = by[(0.9, "on")], by[(0.9, "off")]
+    blocks_ratio = off["blocks_per_req"] / max(on["blocks_per_req"], 1e-9)
+    ttft_ratio = off["ttft_iters"] / max(on["ttft_iters"], 1e-9)
+    record = {
+        "analytic": a_rows,
+        "engine": e_rows,
+        "at_hit_0.9": {
+            "blocks_per_req_off_over_on": round(blocks_ratio, 2),
+            "ttft_off_over_on": round(ttft_ratio, 2),
+            # acceptance (ISSUE 4): >= 2x fewer blocks/req, better TTFT
+            "blocks_2x_fewer": bool(blocks_ratio >= 2.0),
+            "ttft_improved": bool(ttft_ratio > 1.0),
+        },
+        "quick": quick,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# prefix cache @0.9 hit: {blocks_ratio:.1f}x fewer blocks/req, "
+          f"TTFT {off['ttft_iters']:.1f} -> {on['ttft_iters']:.1f} iters, "
+          f"steps/s {off['steps_per_s']:.1f} -> {on['steps_per_s']:.1f} "
+          f"-> {os.path.basename(ROOT_JSON)}")
+    return record
+
+
 if __name__ == "__main__":
-    run()
+    run(quick="--quick" in sys.argv)

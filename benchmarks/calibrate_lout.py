@@ -5,7 +5,6 @@ publishes its L_out distributions; this script recovers compatible
 Run: PYTHONPATH=src python -m benchmarks.calibrate_lout
 """
 import dataclasses
-import itertools
 import math
 
 import numpy as np

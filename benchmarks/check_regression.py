@@ -1,0 +1,93 @@
+"""Bench-regression gate (CI bench-smoke job, ISSUE 4).
+
+Compares a freshly emitted ``BENCH_paged_kv.json`` against the
+committed record and FAILS (exit 1) on a >25% regression in either
+
+  * engine decode throughput — gated on the MACHINE-RELATIVE ratios
+    (``paged_steps_vs_dense``, ``packed_tok_s_vs_dense``: paged and
+    dense are timed back-to-back on the same host, so their ratio
+    cancels absolute machine speed; raw ``steps_per_s`` is NOT gated
+    because the committed record and the CI runner are different
+    machines and a systematic speed gap would fail every run), or
+  * analytic capacity (``slots_paged`` per workload/pool row and the
+    headline ``min_slot_ratio``) — deterministic, compared directly.
+
+Improvements never fail; dense/paged output-token parity must hold.
+Both records are printed in full on failure so the CI log is enough
+to diagnose without re-running.
+
+Usage: python benchmarks/check_regression.py COMMITTED.json FRESH.json
+"""
+import json
+import sys
+
+TOLERANCE = 0.25        # fail when fresh < (1 - TOLERANCE) * committed
+
+# same-machine engine throughput ratios (CPU-noise-tolerant)
+ENGINE_RATIOS = ("paged_steps_vs_dense", "packed_tok_s_vs_dense")
+
+
+def _slot_rows(record):
+    return {(r["workload"], r["pool"]): r for r in record["slots_per_gpu"]}
+
+
+def compare(committed: dict, fresh: dict) -> list:
+    """Returns a list of human-readable regression strings (empty =
+    gate passes)."""
+    bad = []
+
+    def check(name, old, new):
+        if old > 0 and new < (1 - TOLERANCE) * old:
+            bad.append(f"{name}: {new:g} < {1 - TOLERANCE:.2f} * {old:g} "
+                       f"(committed)")
+
+    for key in ENGINE_RATIOS:
+        if key not in committed["engine"]:
+            # record predates the metric: nothing to gate against
+            continue
+        if key not in fresh["engine"]:
+            bad.append(f"engine metric {key!r} missing from fresh record")
+            continue
+        check(f"engine.{key}", committed["engine"][key],
+              fresh["engine"][key])
+    fresh_slots = _slot_rows(fresh)
+    for key, old_row in _slot_rows(committed).items():
+        new_row = fresh_slots.get(key)
+        if new_row is None:
+            bad.append(f"slots row {key!r} missing from fresh record")
+            continue
+        check(f"slots[{key[0]}/{key[1]}].slots_paged",
+              old_row["slots_paged"], new_row["slots_paged"])
+    check("min_slot_ratio", committed["min_slot_ratio"],
+          fresh["min_slot_ratio"])
+    if not fresh["engine"].get("token_parity", False):
+        bad.append("paged/dense output-token parity broke")
+    return bad
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        committed = json.load(f)
+    with open(argv[2]) as f:
+        fresh = json.load(f)
+    bad = compare(committed, fresh)
+    if bad:
+        print("BENCH REGRESSION GATE FAILED "
+              f"(>{TOLERANCE:.0%} below the committed record):")
+        for line in bad:
+            print(f"  - {line}")
+        print("\n--- committed record ---")
+        print(json.dumps(committed, indent=2))
+        print("\n--- fresh record ---")
+        print(json.dumps(fresh, indent=2))
+        return 1
+    print(f"bench-regression gate: OK (all metrics within {TOLERANCE:.0%} "
+          "of the committed record or better)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -5,9 +5,11 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 ``python -m repro.launch.dryrun``; they are skipped if absent).
 
 ``--quick`` is the CI smoke tier: the cheap analytic sweeps plus the
-paged-KV and K-pool benchmarks in their reduced configurations. Both
-tiers refresh the repo-root ``BENCH_paged_kv.json`` perf-trajectory
-record.
+paged-KV, prefix-cache, and K-pool benchmarks in their reduced
+configurations. Both tiers refresh the repo-root perf-trajectory
+records ``BENCH_paged_kv.json`` and ``BENCH_prefix_cache.json`` (the
+former is the bench-smoke regression-gate baseline; see
+benchmarks/check_regression.py).
 """
 import argparse
 import os
@@ -34,8 +36,10 @@ def main(quick: bool = False) -> None:
         bench_borderline.run()              # paper Table 2 (analytic)
         bench_k_pool_sweep.run(quick=True)  # K-pool fleets, CI grid
         bench_paged_kv.run(quick=True)      # paged KV, CI sizes
+        bench_prefix_cache.run(quick=True)  # prefix cache, measured engine
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
-              "CSVs in benchmarks/results/, BENCH_paged_kv.json at root")
+              "CSVs in benchmarks/results/, BENCH_paged_kv.json and "
+              "BENCH_prefix_cache.json at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -49,7 +53,7 @@ def main(quick: bool = False) -> None:
     bench_foc_verification.run()      # Prop. 1 FOC, numerically
     bench_gamma_surface.run()         # Algorithm 1 cost surface
     bench_burstiness.run()            # beyond-paper: MMPP arrivals
-    bench_prefix_cache.run()          # beyond-paper: negative result
+    bench_prefix_cache.run()          # prefix cache: analytic + measured
     bench_speculative.run()           # beyond-paper: occupancy lever
     bench_k_pool_sweep.run(quick=True)  # beyond-paper: K-pool fleets
     bench_paged_kv.run()              # beyond-paper: paged KV cache

@@ -123,7 +123,8 @@ class ModelConfig:
         act_mult = 2 if self.activation == "squared_relu" else 3
         if self.moe is not None:
             eff = self.moe.expert_d_ff or self.d_ff
-            mlp = (self.moe.num_experts + self.moe.num_shared_experts) * act_mult * d * eff
+            mlp = ((self.moe.num_experts + self.moe.num_shared_experts)
+                   * act_mult * d * eff)
             mlp += d * self.moe.num_experts  # router
         else:
             mlp = act_mult * d * self.d_ff
@@ -134,7 +135,8 @@ class ModelConfig:
             attn = 4 * d * inner + inner * d
         if self.family == HYBRID:
             inner = self.ssm.expand * d if self.ssm else 2 * d
-            mamba = 2 * d * inner + inner * d + inner * (self.ssm.state_dim if self.ssm else 64)
+            state = self.ssm.state_dim if self.ssm else 64
+            mamba = 2 * d * inner + inner * d + inner * state
             attn = mamba  # per-layer mamba cost; shared attn counted once below
             mlp = 0       # hybrid layers are Mamba-only; MLP lives in the shared block
         body = L * (attn + mlp)
@@ -158,10 +160,10 @@ class ModelConfig:
         d = self.d_model
         act_mult = 2 if self.activation == "squared_relu" else 3
         eff = self.moe.expert_d_ff or self.d_ff
-        all_exp = self.num_layers * (self.moe.num_experts + self.moe.num_shared_experts) \
-            * act_mult * d * eff
-        active_exp = self.num_layers * (self.moe.top_k + self.moe.num_shared_experts) \
-            * act_mult * d * eff
+        n_exp = self.moe.num_experts + self.moe.num_shared_experts
+        all_exp = self.num_layers * n_exp * act_mult * d * eff
+        n_act = self.moe.top_k + self.moe.num_shared_experts
+        active_exp = self.num_layers * n_act * act_mult * d * eff
         return total - all_exp + active_exp
 
     def reduced(self) -> "ModelConfig":
@@ -179,17 +181,20 @@ class ModelConfig:
         kw["num_heads"], kw["num_kv_heads"] = nh, nkv
         kw["head_dim"] = 64 if self.head_dim else 0
         kw["d_ff"] = min(self.d_ff, 512) if self.d_ff else 0
-        kw["frontend_tokens"] = min(self.frontend_tokens, 16) if self.frontend_tokens else 0
+        kw["frontend_tokens"] = min(self.frontend_tokens, 16) \
+            if self.frontend_tokens else 0
         kw["encoder_layers"] = 2 if self.encoder_layers else 0
         kw["cross_attn_every"] = 2 if self.cross_attn_every else 0
-        kw["attention_window"] = min(self.attention_window, 64) if self.attention_window else 0
+        kw["attention_window"] = min(self.attention_window, 64) \
+            if self.attention_window else 0
         if self.moe is not None:
             kw["moe"] = dataclasses.replace(
                 self.moe,
                 num_experts=min(self.moe.num_experts, 4),
                 top_k=min(self.moe.top_k, 2),
                 num_shared_experts=min(self.moe.num_shared_experts, 1),
-                expert_d_ff=min(self.moe.expert_d_ff, 256) if self.moe.expert_d_ff else 0,
+                expert_d_ff=(min(self.moe.expert_d_ff, 256)
+                             if self.moe.expert_d_ff else 0),
             )
         if self.mla is not None:
             kw["mla"] = dataclasses.replace(

@@ -155,7 +155,6 @@ class ExtractiveCompressor:
         sal = m.sum(axis=1) / np.maximum((m > 0).sum(axis=1), 1)
         sal = sal / max(sal.max(), 1e-12)
         # Novelty: 1 - max similarity to any *earlier* sentence
-        upper = np.triu(sim, k=1)
         max_prev = np.zeros(n)
         if n > 1:
             max_prev[1:] = np.maximum.accumulate(

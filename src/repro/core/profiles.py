@@ -37,6 +37,14 @@ class HardwareProfile:
     # SSM/recurrent archs: slots are O(1) in context length, so the pool
     # boundary doesn't change capacity (the paper's rho -> 1 limit).
     context_free_slots: bool = False
+    # Engine-side ref-counted prefix cache (DESIGN.md §Prefix caching):
+    # fraction of PROMPT tokens expected to hit a cached shared prefix.
+    # Hits skip their prefill iterations (shorter service time, see
+    # FleetDES) and pin no per-request blocks (the shared block is
+    # counted once across all its holders), so the paged methods below
+    # subtract hit tokens from each slot's expected residency when the
+    # caller passes the pool's mean prompt length.
+    prefix_hit_rate: float = 0.0
 
     def n_max(self, c_max: int) -> int:
         """Concurrent slots per GPU for a pool sized for ``c_max`` tokens."""
@@ -59,19 +67,24 @@ class HardwareProfile:
     def _paged_slot_tokens(self, mean_tokens: float,
                            block_size: int = DEFAULT_KV_BLOCK,
                            tail_margin_blocks: int =
-                           DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+                           DEFAULT_TAIL_MARGIN_BLOCKS,
+                           mean_prompt_tokens: float = 0.0) -> int:
         """Expected KV tokens a paged slot pins: E[L_total] rounded up
         to whole blocks plus a tail-margin block reserve (the paged
         analog of the planner's tail_margin — absorbs length-mix
-        drift without re-planning)."""
-        blocks = math.ceil(max(mean_tokens, 1.0) / block_size) \
+        drift without re-planning). With a prefix cache, hit prompt
+        tokens (``prefix_hit_rate * mean_prompt_tokens``) live in
+        shared blocks and are not charged to this slot."""
+        eff = mean_tokens - self.prefix_hit_rate * mean_prompt_tokens
+        blocks = math.ceil(max(eff, 1.0) / block_size) \
             + tail_margin_blocks
         return blocks * block_size
 
     def n_max_paged(self, mean_tokens: float,
                     block_size: int = DEFAULT_KV_BLOCK,
                     tail_margin_blocks: int =
-                    DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+                    DEFAULT_TAIL_MARGIN_BLOCKS,
+                    mean_prompt_tokens: float = 0.0) -> int:
         """Concurrent slots per GPU with a PAGED KV cache.
 
         The dense layout divides the HBM token budget (n_ref * c_ref)
@@ -80,32 +93,47 @@ class HardwareProfile:
         E[L_total] + margin — turning n_max from a worst-case constant
         into a function of the length mix (the runtime analog of the
         paper's hard-boundary -> software-parameter move).
-        ``mean_tokens`` is the pool-conditional E[L_total] in tokens.
+        ``mean_tokens`` is the pool-conditional E[L_total] in tokens;
+        ``mean_prompt_tokens`` (E[L_in]) is only needed when the
+        profile carries a nonzero ``prefix_hit_rate``.
         """
         if self.context_free_slots:
             return self.n_ref
         budget = self.n_ref * self.c_ref          # HBM budget, tokens
         per_slot = self._paged_slot_tokens(mean_tokens, block_size,
-                                           tail_margin_blocks)
+                                           tail_margin_blocks,
+                                           mean_prompt_tokens)
         return max(1, int(budget / per_slot))
 
     def kv_bytes_per_slot_paged(self, mean_tokens: float,
                                 block_size: int = DEFAULT_KV_BLOCK,
                                 tail_margin_blocks: int =
-                                DEFAULT_TAIL_MARGIN_BLOCKS) -> int:
+                                DEFAULT_TAIL_MARGIN_BLOCKS,
+                                mean_prompt_tokens: float = 0.0) -> int:
         return self._paged_slot_tokens(mean_tokens, block_size,
-                                       tail_margin_blocks) \
+                                       tail_margin_blocks,
+                                       mean_prompt_tokens) \
             * self.kv_bytes_per_token
 
     def t_iter_paged(self, mean_tokens: float,
                      block_size: int = DEFAULT_KV_BLOCK,
                      tail_margin_blocks: int =
-                     DEFAULT_TAIL_MARGIN_BLOCKS) -> float:
+                     DEFAULT_TAIL_MARGIN_BLOCKS,
+                     mean_prompt_tokens: float = 0.0) -> float:
         """Iteration latency (s) at full PAGED occupancy: same Eq. 3
         shape, but n is the paged slot count and — when H models the
         per-slot KV read — each slot streams only its actual ~E[L]
-        tokens, not c_max. More slots per iteration, each cheaper."""
-        n = self.n_max_paged(mean_tokens, block_size, tail_margin_blocks)
+        tokens, not c_max. More slots per iteration, each cheaper.
+
+        Prefix sharing reduces only what a slot PINS (n grows via
+        n_max_paged), never what it STREAMS: every decode step still
+        attends the slot's full context, shared blocks included
+        (gather_pages materializes them into each row). So the H
+        scaling deliberately ignores ``prefix_hit_rate`` — a cached
+        pool iterates SLOWER per step (more slots, same per-slot read),
+        it just packs more of them per GPU."""
+        n = self.n_max_paged(mean_tokens, block_size, tail_margin_blocks,
+                             mean_prompt_tokens)
         h = self.h_ms_per_slot
         if self.h_scales_with_context:
             h = h * (self._paged_slot_tokens(mean_tokens, block_size,
@@ -138,7 +166,8 @@ A100_LLAMA70B = HardwareProfile(
 TPU_V5E_LLAMA70B = HardwareProfile(
     name="tpu-v5e-llama3-70b",
     w_ms=10.7,
-    h_ms_per_slot=0.4,          # calibrated: 20.5GB KV / (819GB/s * 16 chips) / 16 slots... per-slot at 64K
+    # calibrated: 20.5GB KV / (819GB/s * 16 chips) / 16 slots @64K
+    h_ms_per_slot=0.4,
     c_chunk=512,
     n_ref=16,
     c_ref=65536,

@@ -15,6 +15,17 @@ compressed to ``T_c = B_j - L_out`` tokens and re-routed to pool j-1 —
 the virtual capacity of every pool below the top grows by its gamma
 with no hardware change.  K=2 reduces exactly to the paper's
 short/long gateway.
+
+Session affinity (DESIGN.md §Prefix caching): multi-turn sessions
+resubmit their whole history, and the engine-side prefix cache only
+pays off if a repeat turn lands on the POOL whose engine still holds
+its KV blocks.  ``route(..., session=...)`` remembers each session's
+last pool and pins later turns to it whenever the turn still fits that
+pool's band (a longer pool always fits a shorter request, so pinning
+can only move a request UP, never overflow a KV budget).  A turn that
+outgrows the remembered pool falls back to natural routing — and C&R
+is skipped for pinned turns, since compressing a repeat turn away from
+its cached prefix would trade a prefill skip for a full re-prefill.
 """
 from __future__ import annotations
 
@@ -25,7 +36,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.compression import ExtractiveCompressor, count_tokens
+from repro.core.compression import ExtractiveCompressor
 from repro.core.naming import pool_names
 from repro.core.workload import COMPRESSIBLE, Request
 
@@ -81,6 +92,7 @@ class RouterStats:
     compressed_ok: int = 0
     compression_attempts: int = 0
     compression_ms_sum: float = 0.0
+    affinity_pinned: int = 0       # repeat turns pinned to their pool
     per_pool: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
@@ -143,6 +155,8 @@ class GatewayRouter:
         self.compressor = compressor or ExtractiveCompressor()
         self.ema = BytesPerTokenEMA()
         self.stats = RouterStats()
+        # session -> pool index of its last turn (prefix-affinity hint)
+        self._session_pool: Dict[str, int] = {}
         # simulation fallback when requests carry no prompt text
         self._p_c = p_c
         self._rng = np.random.default_rng(seed)
@@ -158,15 +172,35 @@ class GatewayRouter:
         return prompt_tokens + req.l_out   # l_out == r.max_output_tokens
 
     # -- main entry ---------------------------------------------------------
-    def route(self, req: Request, prompt_text: Optional[str] = None
-              ) -> RoutingDecision:
+    def route(self, req: Request, prompt_text: Optional[str] = None,
+              session: Optional[str] = None) -> RoutingDecision:
         """Decide the pool for one request; attempt C&R in the
-        borderline band.  Returns a :class:`RoutingDecision` whose
-        ``pool`` is a name from ``pool_names(K)``."""
+        borderline band.  ``session`` (opaque id) enables prefix
+        affinity: a repeat turn is pinned to the session's previous
+        pool when it still fits there, so the engine-side prefix cache
+        sees the turn that holds its blocks.  Returns a
+        :class:`RoutingDecision` whose ``pool`` is a name from
+        ``pool_names(K)``."""
         self.stats.total += 1
         l_total = self.estimate_l_total(req)
         # natural pool: first i with l_total <= B_{i+1}
         idx = bisect.bisect_left(self.boundaries, l_total)
+        prev = self._session_pool.get(session) if session is not None \
+            else None
+        if prev is not None and prev >= idx:
+            # pin to the pool holding the session's cached prefix; a
+            # pool with index >= idx always has room for the request
+            # (c_max monotone in pool index), and C&R is skipped — it
+            # would move the turn away from its blocks
+            self.stats.affinity_pinned += 1
+            return self._decide(prev, l_total, False, l_in=req.l_in)
+        dec = self._route_natural(req, prompt_text, l_total, idx)
+        if session is not None:
+            self._session_pool[session] = dec.pool_index
+        return dec
+
+    def _route_natural(self, req: Request, prompt_text: Optional[str],
+                       l_total: int, idx: int) -> RoutingDecision:
         if idx > 0 and l_total <= self.gammas[idx - 1] * self.boundaries[idx - 1]:
             self.stats.borderline += 1
             if req.category in COMPRESSIBLE:

@@ -8,9 +8,8 @@ path."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
-import jax
 from jax.sharding import Mesh
 
 

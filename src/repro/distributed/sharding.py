@@ -20,7 +20,7 @@ model axis shards its SEQUENCE dim over the model axis instead
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

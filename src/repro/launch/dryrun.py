@@ -162,7 +162,6 @@ def build_step(cfg, shape, ctx):
     """Returns (fn, kwargs_structs, in_shardings, out_shardings)."""
     cfg = IS.effective_config(cfg, shape)
     specs = IS.input_specs(cfg, shape)
-    mesh = ctx.mesh
     pspecs = SH.param_specs(specs["params"], ctx)
     if shape.kind == "train":
         step = make_train_step(cfg, AdamWConfig(), parallel=ctx,

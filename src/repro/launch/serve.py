@@ -49,7 +49,8 @@ def serve_fleet(args) -> None:
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
                                 ctx_scale=512 / plan.pools[-1].c_max,
-                                paged=args.paged)
+                                paged=args.paged or args.prefix_cache,
+                                prefix_cache=args.prefix_cache)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
@@ -81,12 +82,37 @@ def serve_fleet(args) -> None:
               f"{' [C&R]' if d.compressed else ''} "
               f"L_eff={d.l_total_effective}")
     results = rt.run(max_iters=20_000)
+    if args.prefix_cache:
+        # a two-turn agent session, turn 2 AFTER turn 1 completes: it
+        # resubmits turn 1's prompt plus new text — the gateway pins it
+        # to the same pool (session affinity) and the engine's prefix
+        # cache skips the shared full blocks' prefill
+        b0 = bounds[0] if bounds else \
+            next(iter(rt.engines.values())).c_max // 2   # K=1: no bounds
+        base = prompt(max(2, b0 // 4 // 8), "session")
+        for i, text in enumerate((base,
+                                  base + " follow-up resubmits history.")):
+            d = rt.submit(GatewayRequest(rid, text, args.new_tokens,
+                                         session="demo"))
+            print(f"  req {rid}: turn{i + 1:2d} -> {d.pool:6s} "
+                  f"L_eff={d.l_total_effective}")
+            rid += 1
+            results.update(rt.run(max_iters=20_000))
     dt = time.time() - t0
     done = sum(len(res.output_tokens) for res in results.values())
     s = rt.router.stats
     print(f"served {len(results)} requests / {done} tokens in {dt:.1f}s; "
           f"gateway: borderline={s.borderline} "
-          f"compressed={s.compressed_ok} per_pool={s.per_pool}")
+          f"compressed={s.compressed_ok} pinned={s.affinity_pinned} "
+          f"per_pool={s.per_pool}")
+    if args.prefix_cache:
+        for name, eng in rt.engines.items():
+            st = eng.prefix_stats
+            if st["lookups"]:
+                print(f"  {name}: prefix hits {st['hit_blocks']} blocks "
+                      f"({st['hit_tokens']} tokens), "
+                      f"{st['allocated_blocks']} allocated, "
+                      f"{st['registered_blocks']} registered")
 
 
 def main():
@@ -110,6 +136,11 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="--fleet engines use the paged KV cache "
                          "(block-table allocator; same output tokens)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--fleet engines share full prompt blocks via "
+                         "the ref-counted prefix cache (implies --paged) "
+                         "and demo a two-turn session with gateway "
+                         "affinity")
     args = ap.parse_args()
 
     if args.fleet:

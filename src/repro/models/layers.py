@@ -9,7 +9,7 @@ cache (contiguous or ring-buffer for windows).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -409,7 +409,12 @@ def gather_pages(pages, block_tables):
     """Materialize per-slot contiguous rows from the block pool:
     (P, BLOCK_S, Hkv, hd) x (B, NB) -> (B, NB*BLOCK_S, Hkv, hd).
     Entry j of a row is the slot's absolute position j, exactly the
-    dense cache layout, so downstream attention math is unchanged."""
+    dense cache layout, so downstream attention math is unchanged.
+    Rows may ALIAS: with the engine's ref-counted prefix cache, many
+    slots' tables point at the same physical prefix blocks — the
+    gather simply materializes the shared KV into each row, which is
+    why prefix sharing needs no kernel changes (the Pallas paged
+    kernel dereferences the same tables via its index maps)."""
     b, nb = block_tables.shape
     bs = pages.shape[1]
     bt = jnp.clip(block_tables, 0, pages.shape[0] - 1)

@@ -21,7 +21,6 @@ outer scan over repeating groups.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -388,7 +387,6 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
             lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape
                                        ).copy() if rem == 0 else
             jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), st)
-        n_attn = n_groups if rem == 0 else n_groups + (1 if rem else 0)
         hd = cfg.resolved_head_dim
         cache["kv"] = {
             "k": jnp.zeros((n_groups, batch, eff_len, cfg.num_kv_heads, hd),
@@ -480,7 +478,15 @@ def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens,
     block table (per-block dynamic scatter), then attend chunk queries
     over (gathered pages) causally. Same shapes/semantics as
     :func:`prefill_chunk`; rows with lengths == 0 are bitwise no-ops
-    on the block pool."""
+    on the block pool.
+
+    ``start_pos`` need not be 0 for a fresh request: the engine's
+    prefix cache resumes prefill at the first cold token (a
+    block-aligned offset), with the leading block-table entries
+    aliasing blocks shared with other slots. Those blocks are READ
+    (the causal mask spans the whole table) but never written —
+    positions < start_pos scatter nothing — which is what keeps shared
+    prefixes bitwise stable under concurrent prefill."""
     b, l = tokens.shape
     start_pos = jnp.asarray(start_pos, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)

@@ -55,7 +55,6 @@ def moe_block(p: Dict, cfg: ModelConfig, x, ep_axis: Optional[str] = None
 
     Returns (y, aux) with aux = {"lb_loss": load-balance loss,
     "router_fraction": per-expert dispatch fraction}."""
-    mc = cfg.moe
     b, s, d = x.shape
     tokens = x.reshape(-1, d)
     y, aux = _moe_tokens(p, cfg, tokens, ep_axis)

@@ -33,6 +33,19 @@ The KV cache comes in two layouts (DESIGN.md §Paged KV cache):
     mid-flight preemption unnecessary for correctness. Paged mode
     reproduces dense output tokens exactly on the same request stream.
 
+Paged mode can additionally run a REF-COUNTED PREFIX CACHE
+(``prefix_cache=True``; DESIGN.md §Prefix caching): full prompt blocks
+are content-addressed by a chained block hash, admission maps a new
+request's matching leading blocks onto the physical blocks already
+holding their KV (refcount increment, no allocation, no prefill), and
+prefill resumes at the first cold token through the existing
+``start_pos`` chunk path. Blocks whose refcount drops to zero stay
+cached (evictable, LRU) so non-overlapping turns of the same session
+still hit. Only FULL prompt blocks are ever shared; the final partial
+block of a prompt is always private, so no shared block is ever
+written after registration (copy-on-write degenerates to recompute of
+at most ``block_size - 1`` suffix tokens).
+
 Both jitted step functions DONATE the cache pytree (donate_argnums):
 without donation XLA keeps the input and output cache alive across
 every step — a 2x HBM tax on exactly the resource this engine
@@ -47,7 +60,9 @@ gateway/engine pair has.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+from collections import Counter, OrderedDict
 from functools import partial
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -98,11 +113,15 @@ class InferenceEngine:
                  c_chunk: int = 512, eos_id: Optional[int] = None,
                  decode_impl: str = "xla", paged: bool = False,
                  block_size: int = DEFAULT_KV_BLOCK,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
                 "Llama-3-70B); SSM decode runs through models.decode_step")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache=True needs the paged KV cache "
+                             "(block granularity is what gets shared)")
         self.cfg = cfg
         self.params = params
         self.n_max = n_max
@@ -111,6 +130,7 @@ class InferenceEngine:
         self.buckets = prefill_buckets(self.c_chunk)
         self.eos_id = eos_id
         self.paged = paged
+        self.prefix_cache = prefix_cache
         if paged:
             self.block_size = block_size
             # logical blocks per slot: enough to address c_max tokens
@@ -128,7 +148,28 @@ class InferenceEngine:
             self.block_tables = np.zeros((n_max, self.blocks_per_slot),
                                          np.int32)
             self._slot_blocks: List[List[int]] = [[] for _ in range(n_max)]
-            self._slot_worst = [0] * n_max
+            # outstanding (not-yet-allocated) worst-case reservation per
+            # slot; decremented as _ensure_blocks turns it into blocks
+            self._slot_reserved = [0] * n_max
+            # -- ref-counted prefix cache (DESIGN.md §Prefix caching) --
+            # _ref[phys]: live slot-table references to a physical block
+            self._ref = np.zeros(self.num_blocks, np.int64)
+            # chained block hash -> physical block holding its KV
+            self._prefix_map: Dict[bytes, int] = {}
+            # physical block -> its registered hash (reverse index)
+            self._block_hash: Dict[int, bytes] = {}
+            # ref == 0 blocks still holding cached prefixes, LRU order;
+            # they are allocatable (evicted) only when _free runs dry
+            self._cached_free: OrderedDict = OrderedDict()
+            # per-slot chain hashes of its FULL prompt blocks, and how
+            # many leading blocks are already in the prefix map
+            self._slot_hashes: List[List[bytes]] = [[] for _ in range(n_max)]
+            self._slot_registered = [0] * n_max
+            self._hash_seed = hashlib.sha1(
+                f"{cfg.name}/{block_size}".encode()).digest()
+            self.prefix_stats = {"lookups": 0, "hit_blocks": 0,
+                                 "hit_tokens": 0, "allocated_blocks": 0,
+                                 "registered_blocks": 0, "evicted_blocks": 0}
             # device copy of the block table, refreshed only when the
             # allocator touches it (steady-state decode crosses a block
             # boundary once per block_size tokens — re-uploading every
@@ -136,6 +177,13 @@ class InferenceEngine:
             self._bt_device = None
         else:
             self.cache = M.init_cache(cfg, n_max, c_max)
+        # chain hashes memoized for WAITING requests (keyed by rid;
+        # dropped on admit/refuse) — the FIFO head re-probes every
+        # iteration while blocked and must not rehash its prompt.
+        # Always present (the admit/refuse cleanup paths are shared
+        # between dense and paged modes); only ever filled when the
+        # prefix cache is on.
+        self._req_hashes: Dict[int, List[bytes]] = {}
         # per-slot host state
         self.slot_req: List[Optional[ServeRequest]] = [None] * n_max
         self.slot_pos = np.zeros(n_max, np.int32)        # next position
@@ -178,14 +226,24 @@ class InferenceEngine:
         return sum(r is not None for r in self.slot_req) / self.n_max
 
     def free_block_count(self) -> int:
-        """Unallocated physical blocks (paged mode)."""
-        return len(self._free) if self.paged else 0
+        """Allocatable physical blocks (paged mode): the free list plus
+        the cached-but-unreferenced tier (evictable prefix blocks) —
+        the same quantity admission control reserves against."""
+        return self._available_blocks() if self.paged else 0
+
+    def prefix_cache_blocks(self) -> int:
+        """Physical blocks currently content-addressable by prefix hash
+        (referenced or evictable)."""
+        return len(self._prefix_map) if self.paged else 0
 
     def kv_tokens_held(self) -> int:
-        """Tokens of KV memory currently pinned: paged counts only the
-        allocated blocks; dense pins c_max per occupied slot."""
+        """Tokens of KV memory currently pinned: paged counts DISTINCT
+        referenced physical blocks (a prefix block shared by many slots
+        pins HBM once; evictable cached blocks are reclaimable, not
+        pinned); dense pins c_max per occupied slot."""
         if self.paged:
-            return sum(len(b) for b in self._slot_blocks) * self.block_size
+            held = self.num_blocks - len(self._free) - len(self._cached_free)
+            return held * self.block_size
         return sum(r is not None for r in self.slot_req) * self.c_max
 
     def run_to_completion(self, max_iters: int = 100_000) -> Dict[int, ServeResult]:
@@ -260,12 +318,70 @@ class InferenceEngine:
         return math.ceil((len(req.tokens) + req.max_new_tokens)
                          / self.block_size)
 
+    # -- prefix cache (DESIGN.md §Prefix caching) --------------------------
+    def _chain_hashes(self, tokens: List[int]) -> List[bytes]:
+        """One chained content hash per FULL prompt block: h_i =
+        H(h_{i-1} || tokens[i*bs:(i+1)*bs]), seeded per (model, block
+        size). Chaining makes a block hash identify the whole prefix up
+        to and including the block, so equal hashes => equal KV content
+        (prefill K/V at position p is a pure function of the prefix)."""
+        bs = self.block_size
+        out, h = [], self._hash_seed
+        for i in range(len(tokens) // bs):
+            blk = np.asarray(tokens[i * bs:(i + 1) * bs], np.int64)
+            h = hashlib.sha1(h + blk.tobytes()).digest()
+            out.append(h)
+        return out
+
+    def _prefix_hits(self, hashes: List[bytes]) -> int:
+        """Longest chain of leading full blocks already cached."""
+        n = 0
+        for h in hashes:
+            if h not in self._prefix_map:
+                break
+            n += 1
+        return n
+
+    def _available_blocks(self) -> int:
+        """Blocks an allocation could obtain: free + evictable."""
+        return len(self._free) + len(self._cached_free)
+
+    def _alloc_block(self) -> int:
+        """Pop a free block; when the free list is dry, evict the
+        least-recently-released cached prefix block (its hash leaves
+        the prefix map — the content is about to be overwritten)."""
+        if self._free:
+            return self._free.pop()
+        phys, _ = self._cached_free.popitem(last=False)
+        h = self._block_hash.pop(phys)
+        del self._prefix_map[h]
+        self.prefix_stats["evicted_blocks"] += 1
+        return phys
+
+    def _register_prefix_blocks(self, s: int) -> None:
+        """Publish slot ``s``'s full prompt blocks whose KV the prefill
+        has now completely written (slot_pos advanced past their end).
+        First writer wins: if another slot registered the same chain
+        hash concurrently, this slot's copy stays private."""
+        hashes = self._slot_hashes[s]
+        done = min(len(hashes), int(self.slot_pos[s]) // self.block_size)
+        blocks = self._slot_blocks[s]
+        for i in range(self._slot_registered[s], done):
+            h = hashes[i]
+            if h not in self._prefix_map:
+                phys = blocks[i]
+                self._prefix_map[h] = phys
+                self._block_hash[phys] = h
+                self.prefix_stats["registered_blocks"] += 1
+        self._slot_registered[s] = done
+
     def _refuse(self, req: ServeRequest) -> None:
         """Refuse the FIFO head: empty result, no leaked host entries."""
         self.waiting.pop(0)
         self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0)
         self._enqueued_at.pop(req.rid, None)
         self._queue_iters.pop(req.rid, None)
+        self._req_hashes.pop(req.rid, None)
 
     def _admit(self) -> None:
         for s in range(self.n_max):
@@ -281,44 +397,98 @@ class InferenceEngine:
                     # iteration), and without leaking its host entries.
                     self._refuse(req)
                     continue
+                hits = 0
                 if self.paged:
-                    need = self._worst_case_blocks(req)
-                    if need > self.num_blocks:
+                    worst = self._worst_case_blocks(req)
+                    if worst > self.num_blocks:
                         # can NEVER be covered (pool smaller than the
                         # request's worst case): refuse like oversized,
                         # or the FIFO head would defer forever
                         self._refuse(req)
                         continue
-                    if need > len(self._free) - self._reserved:
+                    if self.prefix_cache:
+                        # memoized per rid: a blocked FIFO head probes
+                        # every iteration and must not rehash its whole
+                        # prompt each time (host hot path)
+                        if req.rid not in self._req_hashes:
+                            self._req_hashes[req.rid] = \
+                                self._chain_hashes(req.tokens)
+                        hashes = self._req_hashes[req.rid]
+                    else:
+                        hashes = []
+                    hits = self._prefix_hits(hashes)
+                    # cached leading blocks are reused, not allocated:
+                    # only the cold suffix needs worst-case coverage.
+                    # BUT pinning an EVICTABLE hit (ref 0, cached-free)
+                    # removes it from the allocatable tiers without
+                    # adding to _reserved, so it must be charged here
+                    # too or earlier slots' outstanding reservations
+                    # get over-committed and the allocator runs dry.
+                    need = worst - hits
+                    evictable_hits = sum(
+                        1 for i in range(hits)
+                        if self._ref[self._prefix_map[hashes[i]]] == 0)
+                    if need + evictable_hits > \
+                            self._available_blocks() - self._reserved:
                         # Admission control (DESIGN.md §Paged KV cache):
-                        # the free list cannot cover this request's
-                        # worst-case blocks. It stays queued (FIFO:
+                        # the allocatable blocks cannot cover this
+                        # request's worst case. It stays queued (FIFO:
                         # later requests must not jump it) until
                         # completions return blocks — the invariant
                         # that makes mid-flight preemption unnecessary.
                         return
+                    blocks = self._slot_blocks[s]
+                    for i in range(hits):
+                        phys = self._prefix_map[hashes[i]]
+                        if self._ref[phys] == 0:    # was evictable: pin it
+                            del self._cached_free[phys]
+                        self._ref[phys] += 1
+                        self.block_tables[s, len(blocks)] = phys
+                        blocks.append(phys)
+                    if hits:
+                        self._bt_device = None
                     self._reserved += need
-                    self._slot_worst[s] = need
+                    self._slot_reserved[s] = need
+                    self._slot_hashes[s] = hashes
+                    self._slot_registered[s] = hits
+                    if self.prefix_cache:
+                        self.prefix_stats["lookups"] += 1
+                        self.prefix_stats["hit_blocks"] += hits
+                        self.prefix_stats["hit_tokens"] += \
+                            hits * self.block_size
                 self.waiting.pop(0)
+                self._req_hashes.pop(req.rid, None)
                 self.slot_req[s] = req
-                self.slot_pos[s] = 0
-                self.slot_prefill_left[s] = list(req.tokens)
+                # prefill skips the cached prefix entirely: it resumes
+                # at the first cold token via the start_pos chunk path
+                self.slot_pos[s] = hits * self.block_size if self.paged else 0
+                self.slot_prefill_left[s] = \
+                    list(req.tokens[int(self.slot_pos[s]):])
                 self.slot_out[s] = []
+                if not self.slot_prefill_left[s] and req.tokens:
+                    # fully cached prompt: decode can start this same
+                    # iteration from the last prompt token
+                    self.slot_last_tok[s] = req.tokens[-1]
                 self._queue_iters[req.rid] = \
                     self.iteration - self._enqueued_at.pop(req.rid)
                 break
 
     def _ensure_blocks(self, s: int, tokens_needed: int) -> None:
         """Allocate physical blocks for slot ``s`` until it covers
-        ``tokens_needed`` positions. Admission reserved the worst case,
-        so the free list can never run dry here (asserted)."""
+        ``tokens_needed`` positions. Admission reserved the worst case
+        (net of prefix-cache hits), so the allocatable tiers can never
+        run dry here (asserted)."""
         blocks = self._slot_blocks[s]
         while len(blocks) * self.block_size < tokens_needed:
-            assert self._free, "free list exhausted despite reservation"
-            phys = self._free.pop()
+            assert self._free or self._cached_free, \
+                "allocator exhausted despite reservation"
+            phys = self._alloc_block()
+            self._ref[phys] = 1
             self._reserved -= 1
+            self._slot_reserved[s] -= 1
             self.block_tables[s, len(blocks)] = phys
             blocks.append(phys)
+            self.prefix_stats["allocated_blocks"] += 1
             self._bt_device = None
 
     def _block_table_device(self):
@@ -329,15 +499,65 @@ class InferenceEngine:
         return self._bt_device
 
     def _release_slot(self, s: int) -> None:
-        """Return slot ``s``'s blocks to the free list and drop its
-        unused reservation (request finished early / at its cap)."""
-        blocks = self._slot_blocks[s]
-        self._free.extend(blocks)
-        self._reserved -= self._slot_worst[s] - len(blocks)
+        """DECREMENT the refcount of every block slot ``s`` holds —
+        never free outright: a block shared with another live slot (or
+        registered in the prefix map) must survive this release. Blocks
+        reaching ref == 0 return to the free list if private, or to the
+        evictable LRU tier if they hold a registered prefix. Also drops
+        the slot's unused worst-case reservation (request finished
+        early / at its cap)."""
+        for phys in self._slot_blocks[s]:
+            self._ref[phys] -= 1
+            assert self._ref[phys] >= 0, "refcount underflow"
+            if self._ref[phys] == 0:
+                if phys in self._block_hash:
+                    self._cached_free[phys] = None     # cached, evictable
+                else:
+                    self._free.append(phys)
+        self._reserved -= self._slot_reserved[s]
         self._slot_blocks[s] = []
-        self._slot_worst[s] = 0
+        self._slot_reserved[s] = 0
+        self._slot_hashes[s] = []
+        self._slot_registered[s] = 0
         self.block_tables[s, :] = 0
         self._bt_device = None
+        if not any(r is not None for r in self.slot_req):
+            # engine idle: the refcount invariant must hold exactly
+            self.assert_block_invariants()
+
+    def assert_block_invariants(self) -> None:
+        """Refcount invariant (ISSUE 4): every physical block sits in
+        exactly ONE tier — referenced (ref >= 1), cached-free (ref == 0
+        but prefix-registered), or free — and the per-block refcount
+        equals its live slot-table occurrences, so
+
+            distinct referenced + len(cached_free) + len(free)
+                == num_blocks  (at idle: refs all 0 => the two free
+                                tiers partition the pool)
+
+        Cheap (host-side ints); called at engine idle and from tests at
+        every iteration."""
+        if not self.paged:
+            return
+        cnt = Counter(b for blocks in self._slot_blocks for b in blocks)
+        for phys in range(self.num_blocks):
+            assert self._ref[phys] == cnt.get(phys, 0), \
+                f"block {phys}: ref {self._ref[phys]} != " \
+                f"{cnt.get(phys, 0)} table entries"
+        referenced = set(cnt)
+        free, cached = set(self._free), set(self._cached_free)
+        assert len(free) == len(self._free), "duplicate in free list"
+        assert not referenced & free, "block both referenced and free"
+        assert not referenced & cached, "block both referenced and cached"
+        assert not free & cached, "block both free and cached-free"
+        assert len(referenced) + len(free) + len(cached) == self.num_blocks, \
+            "block leak: tiers do not partition the pool"
+        assert set(self._prefix_map.values()) == set(self._block_hash), \
+            "prefix map and reverse index disagree"
+        assert cached <= set(self._block_hash), \
+            "cached-free block without a registered hash"
+        assert 0 <= self._reserved <= self._available_blocks(), \
+            "reservation exceeds allocatable blocks"
 
     def _prefill_fn(self, decode_impl, params, cache, tokens, start_pos,
                     lengths):
@@ -382,6 +602,10 @@ class InferenceEngine:
             self._prefill_iters[rid] = self._prefill_iters.get(rid, 0) + 1
             if not self.slot_prefill_left[s]:
                 self.slot_last_tok[s] = chunk[-1]
+            if self.paged and self.prefix_cache:
+                # full prompt blocks this chunk completed become
+                # content-addressable for later admissions
+                self._register_prefix_blocks(s)
 
     def _batch_axis(self, leaf) -> int:
         # dense kv caches (L,B,S,H,hd) + int8 scales (L,B,S,H) -> 1;

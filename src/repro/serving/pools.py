@@ -19,7 +19,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.core.compression import ExtractiveCompressor, count_tokens
+from repro.core.compression import ExtractiveCompressor
 from repro.core.naming import pool_names
 from repro.core.planner import FleetPlan
 from repro.core.profiles import DEFAULT_KV_BLOCK
@@ -35,6 +35,10 @@ class GatewayRequest:
     text: str
     max_output_tokens: int
     category: str = "prose"
+    # opaque multi-turn session id: turns of one session share a prompt
+    # prefix, so the gateway pins them to the pool whose engine caches
+    # their KV blocks (router session affinity; None = stateless)
+    session: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -62,7 +66,8 @@ class FleetRuntime:
                  boundaries: Sequence[int], gammas: Sequence[float],
                  n_maxes: Sequence[int], c_maxes: Sequence[int],
                  c_chunk: int = 512, paged: bool = False,
-                 kv_block_size: int = DEFAULT_KV_BLOCK):
+                 kv_block_size: int = DEFAULT_KV_BLOCK,
+                 prefix_cache: bool = False):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -80,10 +85,15 @@ class FleetRuntime:
         # paged=True gives every engine a block-pool KV cache (same HBM
         # as the dense rows by default; see engine num_blocks) — output
         # tokens are identical either way, only residency changes.
+        # prefix_cache=True (needs paged) additionally shares full
+        # prompt blocks between requests via ref-counted block tables;
+        # GatewayRequest.session makes repeat turns land on the engine
+        # that holds their blocks (router session affinity).
         self.engines: Dict[str, InferenceEngine] = {
             names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
                                       c_chunk, paged=paged,
-                                      block_size=kv_block_size)
+                                      block_size=kv_block_size,
+                                      prefix_cache=prefix_cache)
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
 
@@ -92,7 +102,8 @@ class FleetRuntime:
                   slots_per_pool: int = 4, c_chunk: int = 64,
                   ctx_scale: Optional[float] = None,
                   paged: bool = False,
-                  kv_block_size: int = DEFAULT_KV_BLOCK) -> "FleetRuntime":
+                  kv_block_size: int = DEFAULT_KV_BLOCK,
+                  prefix_cache: bool = False) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -114,7 +125,7 @@ class FleetRuntime:
                         for pp in plan.pools)
         return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
                    c_maxes, c_chunk, paged=paged,
-                   kv_block_size=kv_block_size)
+                   kv_block_size=kv_block_size, prefix_cache=prefix_cache)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -124,7 +135,8 @@ class FleetRuntime:
                     l_in=prompt_tokens, l_out=req.max_output_tokens,
                     category=req.category,
                     prompt_bytes=len(req.text.encode("utf-8")))
-        decision = self.router.route(r, prompt_text=req.text)
+        decision = self.router.route(r, prompt_text=req.text,
+                                     session=req.session)
         text = decision.compressed_text if decision.compressed else req.text
         ids = self.tokenizer.encode(text)
         self.engines[decision.pool].submit(ServeRequest(
@@ -170,8 +182,10 @@ class TwoPoolRuntime(FleetRuntime):
     def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
                  n_max_short: int, n_max_long: int, c_max_long: int,
                  c_chunk: int = 512, paged: bool = False,
-                 kv_block_size: int = DEFAULT_KV_BLOCK):
+                 kv_block_size: int = DEFAULT_KV_BLOCK,
+                 prefix_cache: bool = False):
         super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
                          c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
-                         paged=paged, kv_block_size=kv_block_size)
+                         paged=paged, kv_block_size=kv_block_size,
+                         prefix_cache=prefix_cache)

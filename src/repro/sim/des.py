@@ -170,7 +170,8 @@ class FleetDES:
                  max_sim_slots: int = 4096, horizon_services: float = 40.0,
                  paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                 tail_margin_blocks: int = DEFAULT_TAIL_MARGIN_BLOCKS):
+                 tail_margin_blocks: int = DEFAULT_TAIL_MARGIN_BLOCKS,
+                 prefix_hit_rate: Optional[float] = None):
         if workload is None:
             raise ValueError("FleetDES needs the workload to sample from")
         self.plan = plan
@@ -196,6 +197,13 @@ class FleetDES:
         self.paged = paged
         self.kv_block_size = kv_block_size
         self.tail_margin_blocks = tail_margin_blocks
+        # prefix_hit_rate h (DESIGN.md §Prefix caching): the expected
+        # fraction of each prompt already cached on its engine. Hits
+        # skip prefill iterations — effective L_in -> (1-h) L_in in the
+        # service and TTFT models — and (paged) stop pinning their KV
+        # blocks per-request, shrinking each slot's expected residency
+        # in n_max_paged. None = use each pool profile's own knob.
+        self.prefix_hit_rate = prefix_hit_rate
 
     def _profile_of(self, pp: PoolPlan) -> HardwareProfile:
         prof = pp.profile or self.profile
@@ -262,13 +270,23 @@ class FleetDES:
         for pp in active:
             mask = pool_idx == name_to_idx[pp.name]
             prof = self._profile_of(pp)
+            h = self.prefix_hit_rate if self.prefix_hit_rate is not None \
+                else prof.prefix_hit_rate
+            # cached prefix tokens skip their prefill iterations: the
+            # engine resumes at the first cold token (engine.py)
+            li_eff = li * (1.0 - h) if h else li
             if self.paged:
+                prof_eff = prof if prof.prefix_hit_rate == h else \
+                    dataclasses.replace(prof, prefix_hit_rate=h)
                 mean_tok = (float(l_tok[mask].mean()) if mask.any()
                             else float(pp.c_max))
-                n_slot = prof.n_max_paged(mean_tok, self.kv_block_size,
-                                          self.tail_margin_blocks)
-                t_it = prof.t_iter_paged(mean_tok, self.kv_block_size,
-                                         self.tail_margin_blocks)
+                mean_in = float(li[mask].mean()) if mask.any() else 0.0
+                n_slot = prof_eff.n_max_paged(mean_tok, self.kv_block_size,
+                                              self.tail_margin_blocks,
+                                              mean_prompt_tokens=mean_in)
+                t_it = prof_eff.t_iter_paged(mean_tok, self.kv_block_size,
+                                             self.tail_margin_blocks,
+                                             mean_prompt_tokens=mean_in)
             else:
                 n_slot = pp.n_max
                 t_it = prof.t_iter(pp.c_max)
@@ -280,7 +298,7 @@ class FleetDES:
             keep = mask & (rng.uniform(size=n_total) < thin)
             idx = np.where(keep)[0]
             out[pp.name] = simulate_pool(
-                arrivals[idx], li[idx], l_out[idx],
+                arrivals[idx], li_eff[idx], l_out[idx],
                 c_sim, t_it,
                 prof.w_ms / 1000.0, prof.c_chunk,
                 warmup=0.25 * horizon, name=pp.name, n_gpus=pp.n_gpus,

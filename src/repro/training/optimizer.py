@@ -32,7 +32,8 @@ class AdamWState(NamedTuple):
 
 
 def init_adamw(params) -> AdamWState:
-    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def f32(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(f32, params),
                       v=jax.tree.map(f32, params))

@@ -9,8 +9,7 @@ memory at O(sqrt-ish) for the big dry-run configs.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

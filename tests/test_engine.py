@@ -1,6 +1,5 @@
 """Serving engine + two-pool runtime end-to-end."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from conftest import reduced_f32

@@ -6,7 +6,6 @@ import pytest
 
 from repro.models import layers as L
 from repro.models import mla as MLA
-import dataclasses
 from conftest import reduced_f32
 
 

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core.cost import cliff_table, k_pool_savings, pool_cliff_ratios
-from repro.core.planner import (Infeasible, _draw, _split_k, draw_samples,
+from repro.core.planner import (_split_k, draw_samples,
                                 fleetopt_plan, plan_homogeneous, plan_k_pool,
                                 plan_two_pool, pool_names)
 from repro.core.profiles import A100_LLAMA70B, TPU_V5E_LLAMA70B

@@ -51,7 +51,6 @@ def test_gqa_decode_ring_validity():
 
 def test_gqa_decode_matches_model_sdpa():
     """The kernel is a drop-in for layers.decode_attention's XLA path."""
-    import dataclasses
     from conftest import reduced_f32
     from repro.models import model as M
     cfg = reduced_f32("minitron-8b", head_dim=64)

@@ -2,7 +2,6 @@
 variant of each family runs one forward + one decode step + (for a
 representative subset) one train step on CPU, asserting output shapes
 and no NaNs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,11 @@
 """Expert-parallel MoE: shard_map (a2a and psum modes) must equal the
 single-device reference. Needs 8 fake devices -> runs in a subprocess
 (jax locks the device count at first init)."""
+import os
 import subprocess
 import sys
-import os
+
+import pytest
 
 SCRIPT = r"""
 import os
@@ -39,8 +41,6 @@ for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
 print("MOE_SHARDED_OK")
 """
 
-
-import pytest
 
 
 @pytest.mark.slow

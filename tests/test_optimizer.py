@@ -1,5 +1,4 @@
 """AdamW + schedule + checkpoint round trip."""
-import os
 import tempfile
 
 import jax

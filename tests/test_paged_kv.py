@@ -104,7 +104,6 @@ def test_paged_writes_are_noops_for_inactive_rows():
     """paged_scatter_tokens / write_chunk_kv_paged must leave the block
     pool BIT-IDENTICAL for masked rows and padding (the dense engine's
     no-op invariant, paged edition)."""
-    cfg = reduced_f32("llama3-70b")
     kv = {"k": jax.random.normal(jax.random.PRNGKey(0), (8, 16, 2, 64)),
           "v": jax.random.normal(jax.random.PRNGKey(1), (8, 16, 2, 64))}
     bt = jnp.asarray([[0, 1], [2, 3]], jnp.int32)

@@ -1,0 +1,286 @@
+"""Ref-counted prefix caching over the paged KV pool (ISSUE 4):
+shared-prefix bitwise parity on both decode impls, suffix-only block
+allocation, decref-not-free release semantics, refcount invariants,
+eviction, gateway session affinity, and the capacity-model knob."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.router import GatewayRouter
+from repro.core.workload import Request, get_workload
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, ServeRequest
+from repro.serving.pools import GatewayRequest, TwoPoolRuntime
+
+BS = 16                       # block size used throughout
+PREFIX = list(range(100, 148))          # 48 tokens = 3 full blocks
+
+
+@pytest.fixture(scope="module")
+def small_model(rng_key=jax.random.PRNGKey(0)):
+    cfg = reduced_f32("llama3-70b")
+    return cfg, M.init_params(cfg, rng_key)
+
+
+def _engine(cfg, params, prefix_cache=True, n_max=2, c_max=128,
+            num_blocks=None, impl="xla"):
+    return InferenceEngine(cfg, params, n_max=n_max, c_max=c_max,
+                           c_chunk=16, paged=True, block_size=BS,
+                           num_blocks=num_blocks, decode_impl=impl,
+                           prefix_cache=prefix_cache)
+
+
+def _serve_one(eng, req):
+    eng.submit(req)
+    res = eng.run_to_completion(2000)
+    return res[req.rid].output_tokens
+
+
+# ------------------------------------------------------ parity (acceptance)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_shared_prefix_parity_and_suffix_only_alloc(small_model, impl):
+    """Two sequential requests with a common prefix produce BITWISE
+    identical output tokens to cold-start runs, and the second request
+    allocates only its suffix blocks (the cached prefix is mapped, not
+    re-allocated or re-prefilled)."""
+    cfg, params = small_model
+    turn1 = ServeRequest(0, PREFIX + [7, 8, 9], 6)
+    turn2 = ServeRequest(1, PREFIX + [11, 12], 5)
+
+    warm = _engine(cfg, params, impl=impl)
+    out1 = _serve_one(warm, turn1)
+    alloc_before = warm.prefix_stats["allocated_blocks"]
+    out2 = _serve_one(warm, turn2)
+    allocated = warm.prefix_stats["allocated_blocks"] - alloc_before
+
+    # cold-start references (fresh engines, no cache to hit)
+    cold1 = _serve_one(_engine(cfg, params, impl=impl), turn1)
+    cold2 = _serve_one(_engine(cfg, params, impl=impl), turn2)
+    assert out1 == cold1
+    assert out2 == cold2
+
+    # turn2 worst case is ceil((48+2+5)/16) = 4 blocks; 3 are cached
+    assert warm.prefix_stats["hit_blocks"] == len(PREFIX) // BS
+    assert allocated == 1
+    # and its prefill skipped the cached 48 tokens: 1 chunk, not 4
+    assert warm.results[1].prefill_iters == 1
+
+
+def test_concurrent_shared_prefix_matches_dense(small_model):
+    """A mixed continuous-batching stream (overlapping shared-prefix
+    requests + unrelated ones) reproduces dense-engine tokens."""
+    cfg, params = small_model
+    def stream():
+        return [ServeRequest(0, PREFIX + [7, 8, 9], 6),
+                ServeRequest(1, PREFIX + [11, 12], 5),
+                ServeRequest(2, list(range(1, 40)), 4),
+                ServeRequest(3, PREFIX[:32], 5)]
+    dense = InferenceEngine(cfg, params, n_max=2, c_max=128, c_chunk=16)
+    shared = _engine(cfg, params)
+    outs = {}
+    for name, eng in (("dense", dense), ("prefix", shared)):
+        for r in stream():
+            eng.submit(r)
+        outs[name] = {k: v.output_tokens
+                      for k, v in eng.run_to_completion(2000).items()}
+    assert outs["dense"] == outs["prefix"]
+    shared.assert_block_invariants()
+
+
+def test_fully_cached_prompt_skips_prefill_entirely(small_model):
+    """A prompt consisting ONLY of cached full blocks runs zero
+    prefill iterations — decode starts the admission iteration."""
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    _serve_one(eng, ServeRequest(0, PREFIX, 4))
+    out = _serve_one(eng, ServeRequest(1, PREFIX, 4))
+    assert eng.results[1].prefill_iters == 0
+    cold = _serve_one(_engine(cfg, params), ServeRequest(1, PREFIX, 4))
+    assert out == cold
+
+
+# ------------------------------------------------- refcounts / release path
+def test_release_decrefs_shared_blocks_not_frees(small_model):
+    """While one holder of a shared prefix is still decoding, the other
+    finishing must DECREF, not free: the survivor's blocks stay out of
+    the free list and its tokens stay correct (the seed bug this ISSUE
+    hardens against)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_max=2)
+    _serve_one(eng, ServeRequest(99, PREFIX + [1], 2))   # register prefix
+    short = ServeRequest(0, PREFIX + [7], 2)             # finishes first
+    long = ServeRequest(1, PREFIX + [9], 12)             # still running
+    eng.submit(short)
+    eng.submit(long)
+    shared_phys = None
+    while eng.busy() and eng.iteration < 2000:
+        eng.step()
+        if eng.slot_req.count(None) == 0 and shared_phys is None:
+            # both admitted: they must share the 3 prefix blocks
+            assert eng._slot_blocks[0][:3] == eng._slot_blocks[1][:3]
+            shared_phys = list(eng._slot_blocks[0][:3])
+        if 0 in eng.results and eng.results.get(1) is None:
+            # short finished, long alive: shared blocks not in free list
+            assert not set(shared_phys) & set(eng._free)
+            assert all(eng._ref[p] >= 1 for p in shared_phys)
+    assert shared_phys is not None
+    assert len(eng.results[1].output_tokens) == 12
+    eng.assert_block_invariants()
+
+
+def test_refcount_invariant_throughout_and_at_idle(small_model):
+    """The partition invariant (referenced + cached-free + free ==
+    pool) and the ref == table-occurrence mirror hold at EVERY
+    iteration of a mixed run, and at idle all refs are zero."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_max=3, c_max=64, num_blocks=12)
+    rng = np.random.default_rng(0)
+    for rid in range(6):
+        toks = PREFIX[:32] if rid % 2 else \
+            list(rng.integers(1, 900, int(rng.integers(3, 40))))
+        eng.submit(ServeRequest(rid, toks, int(rng.integers(2, 6))))
+    while eng.busy() and eng.iteration < 2000:
+        eng.step()
+        eng.assert_block_invariants()
+    assert len(eng.results) == 6
+    assert int(eng._ref.sum()) == 0
+    assert len(eng._free) + len(eng._cached_free) == eng.num_blocks
+    assert eng._reserved == 0
+    assert eng.kv_tokens_held() == 0
+
+
+def test_eviction_makes_room_and_stays_consistent(small_model):
+    """Distinct prompts cycling through a tiny pool evict LRU cached
+    prefixes instead of leaking them; everything still serves."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_max=1, c_max=64, num_blocks=4)
+    for rid in range(4):
+        eng.submit(ServeRequest(rid, list(range(rid * 50, rid * 50 + 33)),
+                                3))
+    res = eng.run_to_completion(2000)
+    assert sorted(res) == [0, 1, 2, 3]
+    assert eng.prefix_stats["evicted_blocks"] > 0
+    eng.assert_block_invariants()
+
+
+def test_cached_free_blocks_are_reusable_capacity(small_model):
+    """Admission counts evictable cached blocks as allocatable: a pool
+    full of ref-0 cached prefixes still admits a cold worst-case
+    request (the cache never reduces capacity)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_max=1, c_max=128, num_blocks=5)
+    _serve_one(eng, ServeRequest(0, PREFIX + [1], 2))    # caches 3 blocks
+    assert eng.prefix_cache_blocks() == 3
+    # worst case 5 blocks == whole pool; needs eviction to place
+    out = _serve_one(eng, ServeRequest(1, list(range(200, 264)), 12))
+    assert len(out) == 12
+    eng.assert_block_invariants()
+
+
+def test_pinning_evictable_hits_cannot_overcommit_pool(small_model):
+    """Regression (review finding): admission must charge EVICTABLE
+    hit blocks it pins against availability — they leave the
+    allocatable tiers without entering _reserved, so skipping them
+    over-commits earlier reservations and exhausts the allocator
+    mid-serve. num_blocks=5: cached 2-block prefix sits evictable; a
+    cold 3-block request reserves 3; a warm request (2 evictable hits,
+    need 1) must DEFER, not admit into 3 remaining free blocks."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_max=2, c_max=128, num_blocks=5)
+    _serve_one(eng, ServeRequest(9, PREFIX[:32], 2))     # caches 2 blocks
+    assert len(eng._cached_free) == 2
+    cold = ServeRequest(0, list(range(200, 232)), 16)    # worst 3 blocks
+    warm = ServeRequest(1, PREFIX[:32], 16)              # hits 2, need 1
+    eng.submit(cold)
+    eng.submit(warm)
+    while eng.busy() and eng.iteration < 2000:
+        eng.step()                   # seed bug: AssertionError here
+        eng.assert_block_invariants()
+    res = eng.results
+    assert len(res[0].output_tokens) == 16
+    assert len(res[1].output_tokens) == 16
+    # the warm request really was deferred behind the cold one
+    assert res[1].queue_iters > res[0].queue_iters
+
+
+def test_prefix_cache_requires_paged(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        InferenceEngine(cfg, params, n_max=2, c_max=64, prefix_cache=True)
+
+
+# ------------------------------------------------------- gateway propagation
+def test_router_session_affinity_pins_repeat_turns():
+    r = GatewayRouter(boundaries=(4096, 16384), gammas=(1.5, 1.5))
+    def turn(lt, cat="code"):
+        return Request(l_total=lt, l_in=lt - 100, l_out=100, category=cat)
+    assert r.route(turn(1000), session="s").pool == "pool0"
+    assert r.route(turn(8000), session="s").pool == "pool1"   # outgrew
+    d = r.route(turn(1200), session="s")       # still pinned to pool1
+    assert d.pool == "pool1" and r.stats.affinity_pinned == 1
+    # pinned turns skip C&R (compression would abandon the blocks)
+    d = r.route(turn(5000, "rag"), session="s")
+    assert d.pool == "pool1" and not d.compressed
+    # stateless requests are untouched
+    assert r.route(turn(1000)).pool == "pool0"
+
+
+def test_fleet_runtime_prefix_cache_end_to_end(small_model):
+    """TwoPoolRuntime(prefix_cache=True): a two-turn session hits the
+    cache on its second turn and reproduces the uncached tokens."""
+    cfg, params = small_model
+    def runtime(prefix_cache):
+        return TwoPoolRuntime(cfg, params, b_short=64, gamma=1.5,
+                              n_max_short=2, n_max_long=2, c_max_long=256,
+                              c_chunk=16, paged=True,
+                              prefix_cache=prefix_cache)
+    text = "tool call result: " * 12          # deterministic tokenization
+    outs = {}
+    for enabled in (False, True):
+        rt = runtime(enabled)
+        res = {}
+        for turn, t in enumerate((text, text + " next step please")):
+            rt.submit(GatewayRequest(rid=turn, text=t, max_output_tokens=4,
+                                     session="agent-1"))
+            res.update(rt.run(max_iters=5000))
+        outs[enabled] = {k: v.output_tokens for k, v in res.items()}
+        if enabled:
+            hit = sum(e.prefix_stats["hit_blocks"]
+                      for e in rt.engines.values())
+            assert hit > 0
+            assert rt.router.stats.affinity_pinned >= 1
+    assert outs[False] == outs[True]
+
+
+# ---------------------------------------------------------- capacity model
+def test_profile_prefix_hit_rate_packs_more_slots():
+    """n_max_paged grows monotonically with the prefix hit rate (hit
+    prompt tokens stop pinning per-slot blocks), and t_iter never gets
+    worse-per-slot."""
+    mean_tok, mean_in = 6000.0, 5000.0
+    slots = [dataclasses.replace(A100_LLAMA70B, prefix_hit_rate=h)
+             .n_max_paged(mean_tok, mean_prompt_tokens=mean_in)
+             for h in (0.0, 0.5, 0.9)]
+    assert slots == sorted(slots) and slots[2] > slots[0]
+    # hit rate without prompt-length info changes nothing (no free lunch)
+    assert dataclasses.replace(A100_LLAMA70B, prefix_hit_rate=0.9) \
+        .n_max_paged(mean_tok) == A100_LLAMA70B.n_max_paged(mean_tok)
+
+
+def test_des_prefix_hit_rate_shortens_prefill_service():
+    """FleetDES(prefix_hit_rate=h): utilization drops as h rises (each
+    request spends fewer prefill iterations in its slot)."""
+    from repro.core.planner import plan_k_pool
+    from repro.sim.des import FleetDES
+    w = get_workload("agent-heavy")
+    plan = plan_k_pool(w, lam=300.0, t_slo=0.5, k=2)
+    rho = {}
+    for h in (0.0, 0.9):
+        des = FleetDES(plan, workload=w, paged=True, prefix_hit_rate=h)
+        stats = des.run(n_requests=3000, lam=300.0, seed=0)
+        rho[h] = np.mean([ps.utilization for ps in stats.values()])
+    assert rho[0.9] < rho[0.0]

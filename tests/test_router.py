@@ -1,5 +1,4 @@
 """Gateway router: pool decision boundaries + C&R interception."""
-import numpy as np
 import pytest
 
 from repro.core.router import LONG, SHORT, BytesPerTokenEMA, GatewayRouter
