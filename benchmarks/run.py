@@ -5,10 +5,11 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 ``python -m repro.launch.dryrun``; they are skipped if absent).
 
 ``--quick`` is the CI smoke tier: the cheap analytic sweeps plus the
-paged-KV, prefix-cache, and K-pool benchmarks in their reduced
-configurations. Both tiers refresh the repo-root perf-trajectory
-records ``BENCH_paged_kv.json`` and ``BENCH_prefix_cache.json`` (the
-former is the bench-smoke regression-gate baseline; see
+paged-KV, prefix-cache, engine-hot-path, and K-pool benchmarks in
+their reduced configurations. Both tiers refresh the repo-root
+perf-trajectory records ``BENCH_paged_kv.json``,
+``BENCH_prefix_cache.json`` and ``BENCH_engine_hotpath.json`` (the
+first and last are the bench-smoke regression-gate baselines; see
 benchmarks/check_regression.py).
 """
 import argparse
@@ -25,11 +26,12 @@ def main(quick: bool = False) -> None:
                             bench_borderline, bench_burstiness,
                             bench_compression_fidelity,
                             bench_compression_latency, bench_cost_cliff,
-                            bench_des_validation, bench_fleet_savings,
-                            bench_foc_verification, bench_gamma_surface,
-                            bench_k_pool_sweep, bench_paged_kv,
-                            bench_planner_latency, bench_prefix_cache,
-                            bench_speculative, roofline)
+                            bench_des_validation, bench_engine_hotpath,
+                            bench_fleet_savings, bench_foc_verification,
+                            bench_gamma_surface, bench_k_pool_sweep,
+                            bench_paged_kv, bench_planner_latency,
+                            bench_prefix_cache, bench_speculative,
+                            roofline)
     t0 = time.time()
     if quick:
         bench_cost_cliff.run()              # paper Table 1 (analytic)
@@ -37,9 +39,11 @@ def main(quick: bool = False) -> None:
         bench_k_pool_sweep.run(quick=True)  # K-pool fleets, CI grid
         bench_paged_kv.run(quick=True)      # paged KV, CI sizes
         bench_prefix_cache.run(quick=True)  # prefix cache, measured engine
+        bench_engine_hotpath.run(quick=True)  # multi-step decode dispatch
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
-              "CSVs in benchmarks/results/, BENCH_paged_kv.json and "
-              "BENCH_prefix_cache.json at root")
+              "CSVs in benchmarks/results/, BENCH_paged_kv.json, "
+              "BENCH_prefix_cache.json and BENCH_engine_hotpath.json "
+              "at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -57,6 +61,7 @@ def main(quick: bool = False) -> None:
     bench_speculative.run()           # beyond-paper: occupancy lever
     bench_k_pool_sweep.run(quick=True)  # beyond-paper: K-pool fleets
     bench_paged_kv.run()              # beyond-paper: paged KV cache
+    bench_engine_hotpath.run()        # beyond-paper: decode dispatch path
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")

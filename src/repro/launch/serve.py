@@ -50,7 +50,8 @@ def serve_fleet(args) -> None:
                                 c_chunk=c_chunk,
                                 ctx_scale=512 / plan.pools[-1].c_max,
                                 paged=args.paged or args.prefix_cache,
-                                prefix_cache=args.prefix_cache)
+                                prefix_cache=args.prefix_cache,
+                                decode_k=args.decode_k)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
@@ -105,6 +106,11 @@ def serve_fleet(args) -> None:
           f"gateway: borderline={s.borderline} "
           f"compressed={s.compressed_ok} pinned={s.affinity_pinned} "
           f"per_pool={s.per_pool}")
+    disp = sum(e.dispatches for e in rt.engines.values())
+    dtok = sum(e.decode_tokens_emitted for e in rt.engines.values())
+    print(f"engine hot path: decode_k={args.decode_k} "
+          f"{disp} dispatches / {dtok} decode tokens "
+          f"({disp / max(1, dtok):.3f} dispatches/token)")
     if args.prefix_cache:
         for name, eng in rt.engines.items():
             st = eng.prefix_stats
@@ -136,6 +142,11 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="--fleet engines use the paged KV cache "
                          "(block-table allocator; same output tokens)")
+    ap.add_argument("--decode-k", type=int, default=1, metavar="K",
+                    help="--fleet engines run K decode iterations per "
+                         "host dispatch (on-device lax.scan micro-loop; "
+                         "same output tokens, ~K-fold fewer host "
+                         "round-trips in decode-only steady state)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="--fleet engines share full prompt blocks via "
                          "the ref-counted prefix cache (implies --paged) "

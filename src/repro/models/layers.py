@@ -348,23 +348,33 @@ def decode_attention(p: Params, cfg: ModelConfig, x, kv, pos,
     return out @ p["wo"], new_kv
 
 
+def _masked_write_idx(slot, s_max, active):
+    """Per-row write index with the OOB-drop masking idiom (same as the
+    paged pool's scatters): inactive rows write at index ``s_max``,
+    which ``mode="drop"`` discards — their cache row stays untouched,
+    a bitwise no-op by construction rather than by arithmetic."""
+    if active is None:
+        return slot
+    return jnp.where(active, slot, s_max)
+
+
 def _scatter_scalar(cache, new, slot, active=None):
     """cache: (B,S,H); new: (B,H); slot: (B,)."""
-    onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
-    if active is not None:
-        onehot = onehot * active.astype(cache.dtype)[:, None]
-    return cache * (1 - onehot)[:, :, None] + onehot[:, :, None] * new[:, None]
+    idx = _masked_write_idx(slot, cache.shape[1], active)
+    b_idx = jnp.arange(cache.shape[0])
+    return cache.at[b_idx, idx].set(new, mode="drop")
 
 
 def _scatter_slot(cache, new, slot, active=None):
     """cache: (B,S,H,hd); new: (B,H,hd); slot: (B,) -> write per batch.
-    ``active`` masks out rows entirely (their one-hot becomes all-zero,
-    so ``cache * 1 + 0`` reproduces the row bit-for-bit)."""
-    onehot = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)
-    if active is not None:
-        onehot = onehot * active.astype(cache.dtype)[:, None]
-    return cache * (1 - onehot)[:, :, None, None] + \
-        onehot[:, :, None, None] * new[:, None]
+    One indexed scatter-set per call — NOT a one-hot blend over the
+    whole cache (the blend read-modify-writes every (S, H, hd) entry of
+    every row per layer per decode step; the scatter touches one
+    position per row). ``active`` masks rows out via the dropped
+    out-of-range index, leaving them bit-identical."""
+    idx = _masked_write_idx(slot, cache.shape[1], active)
+    b_idx = jnp.arange(cache.shape[0])
+    return cache.at[b_idx, idx].set(new, mode="drop")
 
 
 # -- paged KV cache ---------------------------------------------------------

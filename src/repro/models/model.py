@@ -530,6 +530,61 @@ def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens,
     return logits[:, 0], cache
 
 
+def mixed_step(params: Params, cfg: ModelConfig, tokens, cache: Params,
+               pos, lengths, decode_tokens, decode_active, parallel=None,
+               window: Optional[int] = None,
+               decode_impl: str = "xla") -> Tuple[jnp.ndarray, Params]:
+    """Fused prefill+decode dispatch: advance every prefill row by one
+    chunk AND every decode row by one token in ONE jitted call (the
+    engine's mixed-iteration hot path — previously two back-to-back
+    dispatches).
+
+    Per-row mode routing reuses the masked fixed-shape machinery:
+    ``lengths[s] > 0`` selects prefill mode (rows with 0 are bitwise
+    no-ops in the chunk pass), ``decode_active[s]`` selects decode mode
+    (rows with False are bitwise no-ops in the decode pass). The two
+    row sets are disjoint, and each sub-computation is EXACTLY the one
+    the separate ``prefill_chunk`` / ``decode_step`` dispatches run, so
+    fusing preserves output tokens bit-for-bit.
+
+    ``pos`` serves both modes: a prefill row's chunk starts at its
+    ``pos``; a decode row's new token sits at its ``pos``.
+
+    tokens: (B, L) zero-padded chunks; decode_tokens: (B, 1) last
+    emitted token per decode row. Returns (decode logits (B, V) —
+    garbage for non-decode rows — and the cache after BOTH passes).
+    """
+    _, cache = prefill_chunk(params, cfg, tokens, cache, pos, lengths,
+                             parallel=parallel, window=window,
+                             decode_impl=decode_impl)
+    logits, cache = decode_step(params, cfg, decode_tokens, cache, pos,
+                                parallel=parallel, window=window,
+                                decode_impl=decode_impl,
+                                active=decode_active)
+    return logits, cache
+
+
+def paged_mixed_step(params: Params, cfg: ModelConfig, tokens,
+                     cache: Params, block_tables, pos, lengths,
+                     decode_tokens, decode_active, parallel=None,
+                     decode_impl: str = "xla"
+                     ) -> Tuple[jnp.ndarray, Params]:
+    """Paged analog of :func:`mixed_step`: one jitted call advances
+    prefill rows (:func:`paged_prefill_chunk`) and decode rows
+    (:func:`paged_decode_step`) through the shared block pool. Same
+    mode-mask semantics; both passes dereference the same block
+    tables."""
+    _, cache = paged_prefill_chunk(params, cfg, tokens, cache,
+                                   block_tables, pos, lengths,
+                                   parallel=parallel)
+    logits, cache = paged_decode_step(params, cfg, decode_tokens, cache,
+                                      block_tables, pos,
+                                      parallel=parallel,
+                                      decode_impl=decode_impl,
+                                      active=decode_active)
+    return logits, cache
+
+
 def prefill(params: Params, cfg: ModelConfig, batch: Dict,
             parallel=None, window: Optional[int] = None
             ) -> Tuple[jnp.ndarray, Params]:

@@ -19,6 +19,19 @@ The step path is FIXED-SHAPE (see DESIGN.md §Engine):
     iteration (batched multi-slot prefill with in-place
     dynamic_update_slice on the batched cache), not one call per slot.
 
+The hot path is DEVICE-RESIDENT (DESIGN.md §Engine hot path): every
+step() issues exactly ONE jitted dispatch. Mixed iterations (prefill
+chunks pending alongside live decode rows) fuse both advances into a
+single ``M.mixed_step`` call instead of two back-to-back dispatches.
+Decode-only iterations with ``decode_k > 1`` run K decode steps per
+dispatch through a ``lax.scan`` micro-loop — argmax sampling,
+EOS / budget / c_max termination, and the freeze-on-finish active
+mask all on device; the slot state (last token, position, active,
+remaining budget) stays resident on the device between dispatches and
+the only host traffic is one batched (n_max, K) emitted-token sync.
+Output tokens are BITWISE IDENTICAL to the K=1 sequential path on
+every model family and both decode backends (test-pinned).
+
 The KV cache comes in two layouts (DESIGN.md §Paged KV cache):
 
   * DENSE (default, bitwise-pinned): one contiguous ``(n_max, c_max)``
@@ -114,7 +127,7 @@ class InferenceEngine:
                  decode_impl: str = "xla", paged: bool = False,
                  block_size: int = DEFAULT_KV_BLOCK,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, decode_k: int = 1):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
@@ -198,6 +211,32 @@ class InferenceEngine:
         self._prefill_iters: Dict[int, int] = {}
         # buckets that actually compiled a prefill trace this lifetime
         self.prefill_buckets_used: Set[int] = set()
+        # -- hot-path accounting (DESIGN.md §Engine hot path) --
+        # one DISPATCH == one jitted call; one ITERATION == one
+        # lockstep model step. With decode_k > 1 a single decode
+        # dispatch advances decode_k iterations, so the two clocks
+        # diverge — queue/TTFT accounting stays in iterations.
+        self.decode_k = max(1, int(decode_k))
+        self.dispatches = 0            # jitted calls, total
+        self.decode_dispatches = 0     # decode-only scan/step calls
+        self.decode_tokens_emitted = 0  # tokens emitted, ANY dispatch kind
+        # tokens emitted by decode-ONLY dispatches (the amortization
+        # metric's denominator must match its numerator's scope: a
+        # fused mixed dispatch also emits decode tokens but is not a
+        # decode-only call, so counting its tokens here would let the
+        # <= 1/K gate pass vacuously on mixed-heavy traffic)
+        self._decode_only_tokens = 0
+        self._occ_slot_iters = 0       # occupied slot-iterations
+        # -- device-resident decode state (decode_k > 1 scan path) --
+        # (last_tok, pos, active, budget) live on device BETWEEN scan
+        # dispatches; host mirrors (slot_last_tok / slot_pos / slot_out
+        # lengths) are updated from the batched emitted-token sync, so
+        # steady-state decode uploads NOTHING. Any host-side slot write
+        # outside that replay (admit, prefill advance, mixed step)
+        # marks the device copy dirty — same snapshot-on-upload
+        # discipline as _bt_device.
+        self._dev_state = None
+        self._dev_dirty = True
         # donate_argnums=1: the cache pytree is consumed by each step
         # and its buffer reused for the output (no 2x HBM residency)
         if paged:
@@ -205,6 +244,15 @@ class InferenceEngine:
                                            decode_impl), donate_argnums=1)
             self._prefill_step = jax.jit(self._paged_prefill_fn,
                                          donate_argnums=1)
+            # decode scan: cache + carried device state donated; the
+            # block table (arg 3) is the cached _bt_device and must
+            # survive the call
+            self._decode_scan = jax.jit(
+                partial(self._paged_decode_scan_fn, decode_impl,
+                        self.decode_k),
+                donate_argnums=(1, 2, 4, 5, 6))
+            self._mixed = jax.jit(partial(self._paged_mixed_fn,
+                                          decode_impl), donate_argnums=1)
         else:
             self._decode = jax.jit(partial(self._decode_fn, decode_impl),
                                    donate_argnums=1)
@@ -213,6 +261,11 @@ class InferenceEngine:
             self._prefill_step = jax.jit(partial(self._prefill_fn,
                                                  decode_impl),
                                          donate_argnums=1)
+            self._decode_scan = jax.jit(
+                partial(self._decode_scan_fn, decode_impl, self.decode_k),
+                donate_argnums=(1, 2, 3, 4, 5))
+            self._mixed = jax.jit(partial(self._mixed_fn, decode_impl),
+                                  donate_argnums=1)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
@@ -223,7 +276,29 @@ class InferenceEngine:
         return any(r is not None for r in self.slot_req) or bool(self.waiting)
 
     def utilization_snapshot(self) -> float:
-        return sum(r is not None for r in self.slot_req) / self.n_max
+        """Mean PER-ITERATION slot occupancy since engine start.
+
+        With decode_k > 1 a slot that finishes mid-scan is idle for the
+        remaining micro-iterations of that dispatch even though the
+        host still shows it occupied until the batched sync — so
+        occupancy is accumulated per iteration (a finishing slot
+        contributes exactly the iterations it actually decoded), not
+        per dispatch. This is the occupancy the DES's rho_hat estimator
+        measures, which keeps analytic-vs-engine validation comparable
+        at any K. Before the first iteration, falls back to the
+        instantaneous occupied fraction."""
+        if self.iteration == 0:
+            return sum(r is not None for r in self.slot_req) / self.n_max
+        return self._occ_slot_iters / (self.n_max * self.iteration)
+
+    def dispatches_per_token(self) -> float:
+        """Decode-only jitted calls per token THEY emitted — the host
+        round-trip overhead metric the multi-step scan amortizes
+        (1/decode_k in steady-state decode). Tokens emitted by fused
+        mixed dispatches are excluded from both sides."""
+        if self._decode_only_tokens == 0:
+            return float("inf")
+        return self.decode_dispatches / self._decode_only_tokens
 
     def free_block_count(self) -> int:
         """Allocatable physical blocks (paged mode): the free list plus
@@ -252,9 +327,11 @@ class InferenceEngine:
         return self.results
 
     def num_compiled_traces(self) -> Dict[str, int]:
-        """Compiled-trace counts for the two jitted step functions.
-        The fixed-shape guarantee: decode <= 1 and
-        prefill <= len(self.buckets), whatever the request-length mix."""
+        """Compiled-trace counts for the jitted step functions.
+        The fixed-shape guarantee, whatever the request-length mix:
+        decode <= 1, decode_scan <= 1 (its K is baked in at
+        construction), and prefill/mixed <= len(self.buckets) each
+        (the bucketed chunk shape selects the trace)."""
         def size(fn, fallback):
             try:
                 return int(fn._cache_size())
@@ -262,8 +339,10 @@ class InferenceEngine:
                 return fallback
         return {
             "decode": size(self._decode, 1),
+            "decode_scan": size(self._decode_scan, 1),
             "prefill": size(self._prefill_step,
                             len(self.prefill_buckets_used)),
+            "mixed": size(self._mixed, len(self.prefill_buckets_used)),
         }
 
     def cache_row(self, s: int):
@@ -286,9 +365,20 @@ class InferenceEngine:
 
     # ----------------------------------------------------------------- step
     def step(self) -> None:
-        """One lockstep iteration: admit, advance ALL pending prefills
-        by one chunk in a single batched jitted call, then one masked
-        batched decode for the slots already past prefill."""
+        """One lockstep step: admit, then ONE jitted dispatch
+        (DESIGN.md §Engine hot path):
+
+          * prefill chunks pending AND decode rows live -> one fused
+            M.mixed_step call advances both (previously two
+            back-to-back dispatches);
+          * only prefill chunks -> one batched prefill call;
+          * only decode rows -> one decode dispatch advancing
+            ``decode_k`` iterations via the on-device scan (K = 1 runs
+            the legacy single-step path, bitwise-pinned).
+
+        The iteration clock advances by the number of model iterations
+        the dispatch performed (decode_k for a scan), never by
+        dispatches."""
         self.iteration += 1
         self._admit()
         chunks: Dict[int, List[int]] = {}
@@ -298,20 +388,35 @@ class InferenceEngine:
                 continue
             chunks[s] = self.slot_prefill_left[s][: self.c_chunk]
             self.slot_prefill_left[s] = self.slot_prefill_left[s][self.c_chunk:]
-        if chunks:
-            if self.paged:
-                for s, chunk in chunks.items():
-                    self._ensure_blocks(s, int(self.slot_pos[s]) + len(chunk))
-            self._run_prefill_chunks(chunks)
         decode_mask = np.array(
             [self.slot_req[s] is not None and s not in chunks
              and not self.slot_prefill_left[s] for s in range(self.n_max)],
             bool)
-        if decode_mask.any():
-            if self.paged:
+        occupied = sum(r is not None for r in self.slot_req)
+        if self.paged:
+            for s, chunk in chunks.items():
+                self._ensure_blocks(s, int(self.slot_pos[s]) + len(chunk))
+            if decode_mask.any():
+                k = self.decode_k if not chunks else 1
                 for s in np.where(decode_mask)[0]:
-                    self._ensure_blocks(int(s), int(self.slot_pos[s]) + 1)
-            self._run_decode(decode_mask)
+                    req = self.slot_req[s]
+                    left = req.max_new_tokens - len(self.slot_out[int(s)])
+                    self._ensure_blocks(
+                        int(s), int(self.slot_pos[s]) + min(k, left))
+        if chunks and decode_mask.any():
+            self._occ_slot_iters += occupied
+            self._run_mixed(chunks, decode_mask)
+        elif chunks:
+            self._occ_slot_iters += occupied
+            self._run_prefill_chunks(chunks)
+        elif decode_mask.any():
+            if self.decode_k > 1:
+                self._run_decode_scan(decode_mask)
+            else:
+                self._occ_slot_iters += occupied
+                self._run_decode(decode_mask)
+        else:
+            self._occ_slot_iters += occupied
 
     # ------------------------------------------------------------ internals
     def _worst_case_blocks(self, req: ServeRequest) -> int:
@@ -459,6 +564,7 @@ class InferenceEngine:
                 self.waiting.pop(0)
                 self._req_hashes.pop(req.rid, None)
                 self.slot_req[s] = req
+                self._dev_dirty = True    # slot state rewritten below
                 # prefill skips the cached prefix entirely: it resumes
                 # at the first cold token via the start_pos chunk path
                 self.slot_pos[s] = hits * self.block_size if self.paged else 0
@@ -574,7 +680,11 @@ class InferenceEngine:
                                          block_tables, start_pos, lengths)
         return cache
 
-    def _run_prefill_chunks(self, chunks: Dict[int, List[int]]) -> None:
+    def _bucket_chunks(self, chunks: Dict[int, List[int]]):
+        """Pad pending chunks into the smallest covering bucket shape
+        (shared by the prefill-only and fused mixed dispatches — the
+        bucket choice must be identical for both so each stays within
+        the per-bucket compiled-trace bound)."""
         longest = max(len(c) for c in chunks.values())
         bucket = next(b for b in self.buckets if b >= longest)
         self.prefill_buckets_used.add(bucket)
@@ -583,6 +693,10 @@ class InferenceEngine:
         for s, chunk in chunks.items():
             tokens[s, : len(chunk)] = chunk
             lengths[s] = len(chunk)
+        return tokens, lengths
+
+    def _run_prefill_chunks(self, chunks: Dict[int, List[int]]) -> None:
+        tokens, lengths = self._bucket_chunks(chunks)
         # snapshot slot_pos: jnp.asarray may alias host memory zero-copy
         # and dispatch is async, so passing the live (mutated-below)
         # array would race the device read
@@ -596,6 +710,15 @@ class InferenceEngine:
             self.cache = self._prefill_step(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(start), jnp.asarray(lengths))
+        self.dispatches += 1
+        self._advance_prefill_host(chunks)
+
+    def _advance_prefill_host(self, chunks: Dict[int, List[int]]) -> None:
+        """Host bookkeeping for one dispatched chunk per slot (shared
+        by the prefill-only and fused mixed paths). Dirties the
+        device-resident decode state: slot_pos / slot_last_tok moved
+        under the device copy."""
+        self._dev_dirty = True
         for s, chunk in chunks.items():
             rid = self.slot_req[s].rid
             self.slot_pos[s] += len(chunk)
@@ -629,6 +752,112 @@ class InferenceEngine:
                                             active=active)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    # -- multi-step decode scan (DESIGN.md §Engine hot path) ---------------
+    def _scan_body(self, decode_impl, params, block_tables, carry):
+        """One decode micro-iteration inside the K-step lax.scan:
+        masked decode_step + on-device argmax + on-device termination.
+        A row that finishes (budget spent / EOS / c_max) flips its own
+        active bit and freezes via the no-op invariant — the remaining
+        micro-iterations leave its cache row bit-identical."""
+        cache, tok, pos, active, budget = carry
+        if block_tables is None:
+            logits, cache = M.decode_step(
+                params, self.cfg, tok[:, None], cache, pos,
+                decode_impl=decode_impl, active=active)
+        else:
+            logits, cache = M.paged_decode_step(
+                params, self.cfg, tok[:, None], cache, block_tables, pos,
+                decode_impl=decode_impl, active=active)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # -1 marks rows that emitted nothing this micro-iteration; the
+        # host replay stops at the first -1 per row
+        emitted = jnp.where(active, nxt, -1)
+        tok = jnp.where(active, nxt, tok)
+        pos = jnp.where(active, pos + 1, pos)
+        budget = jnp.where(active, budget - 1, budget)
+        # exact mirror of the host-side completion rule: budget spent
+        # (len(out) reached max_new), EOS emitted, or context full
+        done = budget <= 0
+        if self.eos_id is not None:
+            done = done | (tok == self.eos_id)
+        done = done | (pos >= self.c_max)
+        active = active & ~done
+        return (cache, tok, pos, active, budget), emitted
+
+    def _decode_scan_fn(self, decode_impl, k, params, cache, tok, pos,
+                        active, budget):
+        def body(carry, _):
+            return self._scan_body(decode_impl, params, None, carry)
+        carry, emitted = jax.lax.scan(
+            body, (cache, tok, pos, active, budget), None, length=k)
+        return carry, emitted.T            # (B, K) emitted tokens
+
+    def _paged_decode_scan_fn(self, decode_impl, k, params, cache, tok,
+                              block_tables, pos, active, budget):
+        def body(carry, _):
+            return self._scan_body(decode_impl, params, block_tables, carry)
+        carry, emitted = jax.lax.scan(
+            body, (cache, tok, pos, active, budget), None, length=k)
+        return carry, emitted.T
+
+    def _mixed_fn(self, decode_impl, params, cache, tokens, pos, lengths,
+                  decode_toks, active):
+        logits, cache = M.mixed_step(params, self.cfg, tokens, cache, pos,
+                                     lengths, decode_toks, active,
+                                     decode_impl=decode_impl)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _paged_mixed_fn(self, decode_impl, params, cache, tokens,
+                        block_tables, pos, lengths, decode_toks, active):
+        logits, cache = M.paged_mixed_step(params, self.cfg, tokens, cache,
+                                           block_tables, pos, lengths,
+                                           decode_toks, active,
+                                           decode_impl=decode_impl)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _device_decode_state(self, mask: np.ndarray):
+        """Device-resident (tok, pos, active, budget), re-uploaded ONLY
+        when host bookkeeping wrote slot state since the last scan
+        dispatch. The upload snapshots host arrays (np.array copies —
+        the async-aliasing rule from PR 1: a zero-copy jnp.asarray of a
+        live host buffer would race later in-place host updates)."""
+        if self._dev_dirty or self._dev_state is None:
+            budget = np.zeros(self.n_max, np.int32)
+            for s in range(self.n_max):
+                req = self.slot_req[s]
+                if req is not None:
+                    budget[s] = req.max_new_tokens - len(self.slot_out[s])
+            self._dev_state = (
+                jnp.asarray(np.array(self.slot_last_tok, np.int32)),
+                jnp.asarray(np.array(self.slot_pos, np.int32)),
+                jnp.asarray(np.array(mask)),
+                jnp.asarray(budget))
+            self._dev_dirty = False
+        return self._dev_state
+
+    def _finish_slot(self, s: int) -> None:
+        req = self.slot_req[s]
+        self.results[req.rid] = ServeResult(
+            rid=req.rid, output_tokens=self.slot_out[s],
+            prefill_iters=self._prefill_iters.pop(req.rid, 0),
+            decode_iters=len(self.slot_out[s]),
+            queue_iters=self._queue_iters.pop(req.rid, 0))
+        self.slot_req[s] = None
+        if self.paged:
+            self._release_slot(int(s))
+
+    def _append_token(self, s: int, tok: int) -> bool:
+        """Host mirror of one emitted token; returns True when the slot
+        completed (same rule the device scan applies)."""
+        req = self.slot_req[s]
+        self.slot_out[s].append(tok)
+        self.slot_last_tok[s] = tok
+        self.slot_pos[s] += 1
+        self.decode_tokens_emitted += 1
+        return (len(self.slot_out[s]) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id)
+                or self.slot_pos[s] >= self.c_max)
+
     def _run_decode(self, mask: np.ndarray) -> None:
         # snapshot host state (see _run_prefill_chunks: async dispatch
         # must never observe the in-place updates below)
@@ -643,21 +872,76 @@ class InferenceEngine:
             next_tok, self.cache = self._decode(self.params, self.cache,
                                                 toks, pos,
                                                 jnp.asarray(mask))
+        self.dispatches += 1
+        self.decode_dispatches += 1
+        self._decode_only_tokens += int(mask.sum())
+        self._dev_dirty = True
         next_tok = np.asarray(next_tok)
         for s in np.where(mask)[0]:
-            req = self.slot_req[s]
-            self.slot_out[s].append(int(next_tok[s]))
-            self.slot_last_tok[s] = next_tok[s]
-            self.slot_pos[s] += 1
-            done = len(self.slot_out[s]) >= req.max_new_tokens or \
-                (self.eos_id is not None and next_tok[s] == self.eos_id) or \
-                self.slot_pos[s] >= self.c_max
+            if self._append_token(int(s), int(next_tok[s])):
+                self._finish_slot(int(s))
+
+    def _run_decode_scan(self, mask: np.ndarray) -> None:
+        """One dispatch, ``decode_k`` decode iterations: the lax.scan
+        micro-loop samples, terminates and freezes rows on device;
+        the only sync is the batched (n_max, K) emitted-token pull.
+        The host replays the same completion rule over the batch to
+        update its mirrors WITHOUT re-dirtying the device copy."""
+        k = self.decode_k
+        tok, pos, active, budget = self._device_decode_state(mask)
+        if self.paged:
+            carry, emitted = self._decode_scan(
+                self.params, self.cache, tok, self._block_table_device(),
+                pos, active, budget)
+        else:
+            carry, emitted = self._decode_scan(
+                self.params, self.cache, tok, pos, active, budget)
+        self.cache = carry[0]
+        self._dev_state = carry[1:]
+        self.dispatches += 1
+        self.decode_dispatches += 1
+        emitted = np.asarray(emitted)          # the single host sync
+        self.iteration += k - 1                # step() already added 1
+        for s in np.where(mask)[0]:
+            s = int(s)
+            done = False
+            for j in range(k):
+                t = int(emitted[s, j])
+                if t < 0:
+                    break
+                self._occ_slot_iters += 1
+                self._decode_only_tokens += 1
+                done = self._append_token(s, t)
+                if done:
+                    break
             if done:
-                self.results[req.rid] = ServeResult(
-                    rid=req.rid, output_tokens=self.slot_out[s],
-                    prefill_iters=self._prefill_iters.pop(req.rid, 0),
-                    decode_iters=len(self.slot_out[s]),
-                    queue_iters=self._queue_iters.pop(req.rid, 0))
-                self.slot_req[s] = None
-                if self.paged:
-                    self._release_slot(int(s))
+                self._finish_slot(s)
+            # a row that stayed live emitted every micro-iteration, so
+            # the per-token occupancy increments above already credit
+            # it with all k iterations
+
+    def _run_mixed(self, chunks: Dict[int, List[int]],
+                   mask: np.ndarray) -> None:
+        """Fused prefill+decode dispatch: ONE jitted call advances all
+        pending chunks AND all decode rows (M.mixed_step) — the mixed
+        iteration previously cost two host dispatches."""
+        tokens, lengths = self._bucket_chunks(chunks)
+        # snapshot host state (async-dispatch aliasing rule)
+        pos = jnp.asarray(np.array(self.slot_pos, np.int32))
+        toks = jnp.asarray(np.array(self.slot_last_tok[:, None]))
+        if self.paged:
+            next_tok, self.cache = self._mixed(
+                self.params, self.cache, jnp.asarray(tokens),
+                self._block_table_device(), pos, jnp.asarray(lengths),
+                toks, jnp.asarray(mask))
+        else:
+            next_tok, self.cache = self._mixed(
+                self.params, self.cache, jnp.asarray(tokens), pos,
+                jnp.asarray(lengths), toks, jnp.asarray(mask))
+        self.dispatches += 1
+        self._dev_dirty = True
+        next_tok = np.asarray(next_tok)
+        self._advance_prefill_host(chunks)
+        for s in np.where(mask)[0]:
+            if self._append_token(int(s), int(next_tok[s])):
+                self._finish_slot(int(s))

@@ -67,7 +67,7 @@ class FleetRuntime:
                  n_maxes: Sequence[int], c_maxes: Sequence[int],
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, decode_k: int = 1):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -89,11 +89,15 @@ class FleetRuntime:
         # prompt blocks between requests via ref-counted block tables;
         # GatewayRequest.session makes repeat turns land on the engine
         # that holds their blocks (router session affinity).
+        # decode_k>1 runs each engine's decode-only dispatches as a
+        # K-step on-device scan (DESIGN.md §Engine hot path) — same
+        # output tokens, ~K-fold fewer host round-trips per token.
         self.engines: Dict[str, InferenceEngine] = {
             names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
                                       c_chunk, paged=paged,
                                       block_size=kv_block_size,
-                                      prefix_cache=prefix_cache)
+                                      prefix_cache=prefix_cache,
+                                      decode_k=decode_k)
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
 
@@ -103,7 +107,8 @@ class FleetRuntime:
                   ctx_scale: Optional[float] = None,
                   paged: bool = False,
                   kv_block_size: int = DEFAULT_KV_BLOCK,
-                  prefix_cache: bool = False) -> "FleetRuntime":
+                  prefix_cache: bool = False,
+                  decode_k: int = 1) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -125,7 +130,8 @@ class FleetRuntime:
                         for pp in plan.pools)
         return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
                    c_maxes, c_chunk, paged=paged,
-                   kv_block_size=kv_block_size, prefix_cache=prefix_cache)
+                   kv_block_size=kv_block_size, prefix_cache=prefix_cache,
+                   decode_k=decode_k)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -183,9 +189,9 @@ class TwoPoolRuntime(FleetRuntime):
                  n_max_short: int, n_max_long: int, c_max_long: int,
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, decode_k: int = 1):
         super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
                          c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
                          paged=paged, kv_block_size=kv_block_size,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache, decode_k=decode_k)
