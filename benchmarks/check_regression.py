@@ -30,12 +30,22 @@ FAILS (exit 1) on a >25% regression.
   * ``dispatch_amortization_ok`` — deterministic counter check
     (decode dispatches/token <= 1/K); must hold.
 
+``BENCH_sharded_serving.json`` (optional 5th/6th args):
+
+  * only the DETERMINISTIC flags gate: ``token_parity`` (tp=2/4
+    engines emit bitwise the tp=1 tokens) and ``hbm_scaling_ok``
+    (per-device KV bytes scale exactly 1/tp), plus every committed tp
+    row being present. Throughput is NOT gated — the CI mesh is 8
+    faked CPU devices whose collectives run in-process, so absolute
+    and relative steps/s say nothing about real-accelerator scaling.
+
 Improvements never fail; dense/paged output-token parity must hold.
-Both records are printed in full on failure so the CI log is enough
+All records are printed in full on failure so the CI log is enough
 to diagnose without re-running.
 
 Usage: python benchmarks/check_regression.py COMMITTED.json FRESH.json
-           [COMMITTED_hotpath.json FRESH_hotpath.json]
+           [COMMITTED_hotpath.json FRESH_hotpath.json
+            [COMMITTED_sharded.json FRESH_sharded.json]]
 """
 import json
 import sys
@@ -115,8 +125,26 @@ def compare_hotpath(committed: dict, fresh: dict) -> list:
     return bad
 
 
+def compare_sharded(committed: dict, fresh: dict) -> list:
+    """Sharded-serving record: deterministic invariants only (see
+    module docstring — faked-CPU-mesh throughput is meaningless)."""
+    bad = []
+    if not fresh.get("token_parity", False):
+        bad.append("sharded: tp>1 output tokens diverged from the tp=1 "
+                   "engine (bitwise parity contract broke)")
+    if not fresh.get("hbm_scaling_ok", False):
+        bad.append("sharded: per-device KV bytes no longer scale 1/tp "
+                   "(cache silently replicating?)")
+    fresh_tps = {r["tp"] for r in fresh.get("rows", [])}
+    for r in committed.get("rows", []):
+        if r["tp"] not in fresh_tps:
+            bad.append(f"sharded: tp={r['tp']} row missing from fresh "
+                       "record")
+    return bad
+
+
 def main(argv) -> int:
-    if len(argv) not in (3, 5):
+    if len(argv) not in (3, 5, 7):
         print(__doc__)
         return 2
     with open(argv[1]) as f:
@@ -125,13 +153,20 @@ def main(argv) -> int:
         fresh = json.load(f)
     bad = compare(committed, fresh)
     records = [("paged_kv", committed, fresh)]
-    if len(argv) == 5:
+    if len(argv) >= 5:
         with open(argv[3]) as f:
             committed_hp = json.load(f)
         with open(argv[4]) as f:
             fresh_hp = json.load(f)
         bad += compare_hotpath(committed_hp, fresh_hp)
         records.append(("engine_hotpath", committed_hp, fresh_hp))
+    if len(argv) == 7:
+        with open(argv[5]) as f:
+            committed_sh = json.load(f)
+        with open(argv[6]) as f:
+            fresh_sh = json.load(f)
+        bad += compare_sharded(committed_sh, fresh_sh)
+        records.append(("sharded_serving", committed_sh, fresh_sh))
     if bad:
         print("BENCH REGRESSION GATE FAILED "
               f"(>{TOLERANCE:.0%} below the committed record):")

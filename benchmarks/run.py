@@ -30,8 +30,8 @@ def main(quick: bool = False) -> None:
                             bench_fleet_savings, bench_foc_verification,
                             bench_gamma_surface, bench_k_pool_sweep,
                             bench_paged_kv, bench_planner_latency,
-                            bench_prefix_cache, bench_speculative,
-                            roofline)
+                            bench_prefix_cache, bench_sharded_serving,
+                            bench_speculative, roofline)
     t0 = time.time()
     if quick:
         bench_cost_cliff.run()              # paper Table 1 (analytic)
@@ -40,10 +40,11 @@ def main(quick: bool = False) -> None:
         bench_paged_kv.run(quick=True)      # paged KV, CI sizes
         bench_prefix_cache.run(quick=True)  # prefix cache, measured engine
         bench_engine_hotpath.run(quick=True)  # multi-step decode dispatch
+        bench_sharded_serving.run(quick=True)  # tp-sharded engines
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
               "CSVs in benchmarks/results/, BENCH_paged_kv.json, "
-              "BENCH_prefix_cache.json and BENCH_engine_hotpath.json "
-              "at root")
+              "BENCH_prefix_cache.json, BENCH_engine_hotpath.json and "
+              "BENCH_sharded_serving.json at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -62,6 +63,7 @@ def main(quick: bool = False) -> None:
     bench_k_pool_sweep.run(quick=True)  # beyond-paper: K-pool fleets
     bench_paged_kv.run()              # beyond-paper: paged KV cache
     bench_engine_hotpath.run()        # beyond-paper: decode dispatch path
+    bench_sharded_serving.run()       # beyond-paper: tp-sharded engines
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")

@@ -8,6 +8,11 @@ mixed batch of short / borderline / long prompts through the gateway,
 and prints per-request routing + serving outcomes.
 
 Run: PYTHONPATH=src python examples/serve_two_pool.py [--pools 3]
+
+Multi-device (each pool engine tensor-parallel over 2 devices, faked
+on a CPU host):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python examples/serve_two_pool.py --tp 2
 """
 import argparse
 import dataclasses
@@ -36,7 +41,23 @@ def main():
     ap.add_argument("--pools", type=int, default=2, choices=(2, 3),
                     help="2 = the paper's short/long split; 3 adds a "
                          "mid-context pool (generalized boundary vector)")
+    ap.add_argument("--tp", type=int, default=1, metavar="D",
+                    help="tensor-parallel degree per pool engine "
+                         "(needs D*pools devices for distinct "
+                         "submeshes; same output tokens)")
+    ap.add_argument("--mesh", default="", metavar="DxM",
+                    help="global mesh shape to carve submeshes from "
+                         "(default: one flat row over all devices)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.tp > 1 or args.mesh:
+        from repro.launch.mesh import make_smoke_mesh
+        if args.mesh:
+            d, m = (int(x) for x in args.mesh.split("x"))
+            mesh = jax.make_mesh((d, m), ("data", "model"))
+        else:
+            mesh = make_smoke_mesh()
 
     cfg = dataclasses.replace(get_config("llama3-70b").reduced(),
                               dtype="float32")
@@ -52,7 +73,10 @@ def main():
         boundaries, gammas = (B_SHORT, 1024), (GAMMA, GAMMA)
         n_maxes, c_maxes = (4, 3, 2), (B_SHORT, 1024, 4096)
     rt = FleetRuntime(cfg, params, boundaries, gammas, n_maxes, c_maxes,
-                      c_chunk=64)
+                      c_chunk=64, mesh=mesh, tp_degree=args.tp)
+    if mesh is not None:
+        for name, ids in rt.device_placement().items():
+            print(f"  {name}: tp={args.tp} devices={ids}")
     requests = [
         GatewayRequest(0, "What is the cost cliff?", 8),
         GatewayRequest(1, make_prompt(3, "short"), 8),

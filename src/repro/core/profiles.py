@@ -45,23 +45,44 @@ class HardwareProfile:
     # subtract hit tokens from each slot's expected residency when the
     # caller passes the pool's mean prompt length.
     prefix_hit_rate: float = 0.0
+    # Devices per engine REPLICA (tensor-parallel degree; DESIGN.md
+    # §Sharded serving). n_ref/c_ref stay PER-DEVICE calibration
+    # constants; a replica spanning d devices aggregates d x the HBM
+    # token budget (the sharded KV cache splits over kv-heads, so each
+    # device holds 1/d of every slot) and d x the memory bandwidth (the
+    # per-slot H cost divides by d while the slot count multiplies by
+    # d, leaving t_iter at a given c_max unchanged — TP collectives
+    # and the unsplit W are deliberately NOT modeled; the paper's
+    # (W, H) were calibrated on an 8-GPU TP node already). Pool sizing
+    # then counts REPLICAS, and annual_cost bills every device of
+    # every replica. The default 1 reproduces the single-device
+    # numbers bit-for-bit.
+    devices_per_replica: int = 1
 
     def n_max(self, c_max: int) -> int:
-        """Concurrent slots per GPU for a pool sized for ``c_max`` tokens."""
+        """Concurrent slots per REPLICA (= per GPU at
+        devices_per_replica == 1) for a pool sized for ``c_max``."""
         if self.context_free_slots:
             return self.n_ref
-        return max(1, int(self.n_ref * self.c_ref / c_max))
+        return max(1, int(self.n_ref * self.devices_per_replica
+                          * self.c_ref / c_max))
 
     def t_iter(self, c_max: int) -> float:
-        """Iteration latency (seconds) at full occupancy (paper Eq. 3)."""
+        """Iteration latency (seconds) at full occupancy (paper Eq. 3).
+        Per-slot H divides by devices_per_replica (aggregate bandwidth),
+        cancelling the replica's larger slot count."""
         n = self.n_max(c_max)
-        h = self.h_ms_per_slot
+        h = self.h_ms_per_slot / self.devices_per_replica
         if self.h_scales_with_context:
             h = h * (c_max / self.c_ref)
         return (self.w_ms + h * n) / 1000.0
 
-    def kv_bytes_per_slot(self, c_max: int) -> int:
-        return c_max * self.kv_bytes_per_token
+    def kv_bytes_per_slot(self, c_max: int, per_device: bool = False) -> int:
+        """Worst-case KV bytes one slot pins; ``per_device=True`` gives
+        the shard each of the replica's devices holds (the serving
+        cache shards the kv-head dim, an even 1/d split)."""
+        b = c_max * self.kv_bytes_per_token
+        return b // self.devices_per_replica if per_device else b
 
     # -- paged KV variants (DESIGN.md §Paged KV cache) ---------------------
     def _paged_slot_tokens(self, mean_tokens: float,
@@ -99,7 +120,9 @@ class HardwareProfile:
         """
         if self.context_free_slots:
             return self.n_ref
-        budget = self.n_ref * self.c_ref          # HBM budget, tokens
+        # replica HBM budget in tokens: d devices' worth of per-device
+        # budget (the paged pool shards over the replica's devices)
+        budget = self.n_ref * self.c_ref * self.devices_per_replica
         per_slot = self._paged_slot_tokens(mean_tokens, block_size,
                                            tail_margin_blocks,
                                            mean_prompt_tokens)
@@ -109,11 +132,13 @@ class HardwareProfile:
                                 block_size: int = DEFAULT_KV_BLOCK,
                                 tail_margin_blocks: int =
                                 DEFAULT_TAIL_MARGIN_BLOCKS,
-                                mean_prompt_tokens: float = 0.0) -> int:
-        return self._paged_slot_tokens(mean_tokens, block_size,
-                                       tail_margin_blocks,
-                                       mean_prompt_tokens) \
+                                mean_prompt_tokens: float = 0.0,
+                                per_device: bool = False) -> int:
+        b = self._paged_slot_tokens(mean_tokens, block_size,
+                                    tail_margin_blocks,
+                                    mean_prompt_tokens) \
             * self.kv_bytes_per_token
+        return b // self.devices_per_replica if per_device else b
 
     def t_iter_paged(self, mean_tokens: float,
                      block_size: int = DEFAULT_KV_BLOCK,
@@ -134,7 +159,7 @@ class HardwareProfile:
         it just packs more of them per GPU."""
         n = self.n_max_paged(mean_tokens, block_size, tail_margin_blocks,
                              mean_prompt_tokens)
-        h = self.h_ms_per_slot
+        h = self.h_ms_per_slot / self.devices_per_replica
         if self.h_scales_with_context:
             h = h * (self._paged_slot_tokens(mean_tokens, block_size,
                                              tail_margin_blocks)
@@ -142,7 +167,22 @@ class HardwareProfile:
         return (self.w_ms + h * n) / 1000.0
 
     def annual_cost(self, n_gpus: int) -> float:
-        return n_gpus * self.cost_per_hour * HOURS_PER_YEAR
+        """Annual $ for ``n_gpus`` REPLICAS — every device of every
+        replica bills (a tp=4 replica is 4 accelerators on the invoice
+        whatever the planner calls a 'GPU')."""
+        return n_gpus * self.devices_per_replica * self.cost_per_hour \
+            * HOURS_PER_YEAR
+
+    def sharded(self, devices: int) -> "HardwareProfile":
+        """This profile with ``devices``-way tensor-parallel replicas
+        (serving/engine.py mesh mode; DESIGN.md §Sharded serving)."""
+        if devices < 1:
+            raise ValueError(f"devices_per_replica must be >= 1, "
+                             f"got {devices}")
+        if devices == self.devices_per_replica:
+            return self
+        return dataclasses.replace(self, devices_per_replica=devices,
+                                   name=f"{self.name}:tp{devices}")
 
 
 # Paper-faithful profile: Llama-3-70B / A100-80GB (§7.1).

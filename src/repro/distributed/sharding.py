@@ -20,6 +20,7 @@ model axis shards its SEQUENCE dim over the model axis instead
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Optional, Sequence
 
 import jax
@@ -42,6 +43,26 @@ OPTIONS = {
 def set_baseline():
     """Paper-faithful/first-cut sharding (the §Perf baselines)."""
     OPTIONS["mla_cache"] = "lora"
+
+
+@contextlib.contextmanager
+def sharding_options(**overrides):
+    """Scoped override of the module-global ``OPTIONS`` with guaranteed
+    restore — ``set_baseline()`` has no restore path, so a test module
+    flipping it would leak the baseline into every later module of the
+    same process. Unknown keys raise (a typo would otherwise silently
+    test the defaults)."""
+    unknown = set(overrides) - set(OPTIONS)
+    if unknown:
+        raise KeyError(f"unknown sharding option(s): {sorted(unknown)}; "
+                       f"valid: {sorted(OPTIONS)}")
+    saved = dict(OPTIONS)
+    OPTIONS.update(overrides)
+    try:
+        yield OPTIONS
+    finally:
+        OPTIONS.clear()
+        OPTIONS.update(saved)
 
 # leaf names whose LAST dim is the sharded output-feature dim
 _COL_PARALLEL = {"wq", "wk", "wv", "up", "gate", "wuk", "wuv",
@@ -208,6 +229,51 @@ def cache_specs(cache_shapes: Any, ctx: ParallelContext, batch: int) -> Any:
             if bdim is not None:
                 s[bdim] = dp
         return P(*s)
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def serving_cache_specs(cache_shapes: Any, ctx: ParallelContext,
+                        paged: bool = False) -> Any:
+    """Engine KV-cache specs (serving/engine.py, DESIGN.md §Sharded
+    serving). Unlike :func:`cache_specs` (train/dryrun decode, where
+    the batch shards over data axes), the engine's slot/batch dim
+    always REPLICATES: slots are host-scheduled (admit / free /
+    block-table writes are host-side bookkeeping) and the device-
+    resident slot state ``(last_tok, pos, active, budget)`` is a
+    replicated mirror — sharding slots would put the scheduler on a
+    collective path.
+
+    K/V shard the KV-HEAD dim over the model axis (the dim the
+    col-parallel wk/wv rules already shard, so the decode write is
+    local); when kv-heads don't divide the axis the fallback is the
+    SEQUENCE dim for the dense layout (flash-decode-style context
+    parallelism, same guarded pattern as the MLA ``seq`` option) and
+    the PHYSICAL-BLOCK dim for the paged pool (each device owns a
+    slice of the block pool — the paged analog of context parallelism,
+    since a block is a contiguous token range). Neither dividing
+    replicates (correct, just not distributed).
+
+      dense  kv  (L, B, S, Hkv, hd):     head -> model, else S
+      paged  pool (L, P, bs, Hkv, hd):   head -> model, else P
+      vlm    kv  (G, E, B, S, Hkv, hd) and xk/xv (G, B, F, Hkv, hd):
+                                          head -> model, else seq
+      int8 scales (.., S, Hkv):           head -> model, else seq/P
+    """
+    mx = ctx.model_axis
+    mxn = ctx.mesh.shape[mx]
+
+    def spec(path, leaf):
+        name = _path_names(path)[-1]
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):
+            head_dim = nd - 2
+            fallback = 1 if paged else nd - 3
+            return _guarded(leaf.shape, [(head_dim,), (fallback,)], mxn, mx)
+        if name in ("k_scale", "v_scale"):
+            head_dim = nd - 1
+            fallback = 1 if paged else nd - 2
+            return _guarded(leaf.shape, [(head_dim,), (fallback,)], mxn, mx)
+        return P(*([None] * nd))     # ssm/recurrent leaves: replicated
     return jax.tree_util.tree_map_with_path(spec, cache_shapes)
 
 

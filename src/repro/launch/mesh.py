@@ -10,7 +10,10 @@ import; tests and benches see 1 device).
 """
 from __future__ import annotations
 
+from typing import List
+
 import jax
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,5 +25,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh(model: int = 1):
     """A tiny mesh on whatever devices exist (CPU tests)."""
     n = jax.device_count()
-    assert n % model == 0
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model axis size {model} does not divide the {n} available "
+            "device(s); pick a tp degree that divides jax.device_count() "
+            "(CPU hosts can fake more via "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_submeshes(mesh: Mesh, tp_degree: int) -> List[Mesh]:
+    """Carve ``mesh`` into engine-replica submeshes of ``tp_degree``
+    devices each: consecutive device groups, every submesh shaped
+    ``(1, tp_degree)`` over ``("data", "model")`` so a serving replica
+    tensor-parallelizes over its own devices and shares nothing with
+    its neighbours. Fleet placement (serving/pools.FleetRuntime) pins
+    one engine per submesh."""
+    devices = mesh.devices.reshape(-1)
+    if tp_degree < 1 or devices.size % tp_degree:
+        raise ValueError(
+            f"tp_degree {tp_degree} does not divide the mesh's "
+            f"{devices.size} device(s)")
+    return [Mesh(devices[i:i + tp_degree].reshape(1, tp_degree),
+                 ("data", "model"))
+            for i in range(0, devices.size, tp_degree)]

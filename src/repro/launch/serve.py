@@ -45,17 +45,31 @@ def serve_fleet(args) -> None:
         cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     c_chunk = 16
+    mesh = None
+    if args.tp > 1:
+        # tp>1 shards every pool engine over a tp-device submesh
+        # (DESIGN.md §Sharded serving); --mesh DxM picks the global
+        # mesh shape, else one flat row over all devices.
+        from repro.launch.mesh import make_smoke_mesh
+        if args.mesh:
+            d, m = (int(x) for x in args.mesh.split("x"))
+            mesh = jax.make_mesh((d, m), ("data", "model"))
+        else:
+            mesh = make_smoke_mesh()
     # scale datacenter-token boundaries onto the demo model's cache
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
                                 ctx_scale=512 / plan.pools[-1].c_max,
                                 paged=args.paged or args.prefix_cache,
                                 prefix_cache=args.prefix_cache,
-                                decode_k=args.decode_k)
+                                decode_k=args.decode_k,
+                                mesh=mesh, tp_degree=args.tp)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
           f"contexts={[e.c_max for e in rt.engines.values()]}")
+    for name, ids in rt.device_placement().items():
+        print(f"  {name}: tp={rt.tp_degree} devices={ids}")
 
     def prompt(n_words: int, topic: str) -> str:
         return " ".join(f"{topic} fact {i}: fleets split by context length."
@@ -147,6 +161,11 @@ def main():
                          "host dispatch (on-device lax.scan micro-loop; "
                          "same output tokens, ~K-fold fewer host "
                          "round-trips in decode-only steady state)")
+    ap.add_argument("--tp", type=int, default=1, metavar="D",
+                    help="--fleet engines run tensor-parallel over D "
+                         "devices each (submeshes of --mesh or of a "
+                         "flat mesh over all devices; same output "
+                         "tokens, 1/D per-device KV)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="--fleet engines share full prompt blocks via "
                          "the ref-counted prefix cache (implies --paged) "

@@ -253,21 +253,37 @@ def cross_attention(p: Params, cfg: ModelConfig, x, memory):
 
 
 # -- decode path ------------------------------------------------------------
+def cache_zeros(shape, dtype, sharding=None):
+    """Zero cache buffer, created DIRECTLY under ``sharding`` (a
+    jax.sharding.Sharding or None): a sharded serving cache must never
+    materialize replicated first — at real sizes the replicated
+    intermediate alone would OOM the very HBM the sharding buys."""
+    if sharding is None:
+        return jnp.zeros(shape, dtype)
+    return jnp.zeros(shape, dtype, device=sharding)
+
+
 def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int,
-                  dtype=None) -> Params:
+                  dtype=None, shardings=None) -> Params:
     """Contiguous KV cache; for windowed attention ``max_seq`` should be
     the window size (ring buffer). With cfg.kv_cache_dtype == "int8"
-    the cache halves: int8 values + per-(seq, head) bf16 scales."""
+    the cache halves: int8 values + per-(seq, head) bf16 scales.
+    ``shardings``: optional per-leaf dict (keys "k"/"v"/"k_scale"/
+    "v_scale") of jax shardings — the serving engine passes its
+    kv-head-sharded NamedShardings (distributed/sharding.py
+    ``serving_cache_specs``)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
+    sh = shardings or {}
     hd = cfg.resolved_head_dim
     shape = (n_layers, batch, max_seq, cfg.num_kv_heads, hd)
     if cfg.kv_cache_dtype == "int8":
         sshape = shape[:-1]
-        return {"k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_scale": jnp.zeros(sshape, dtype),
-                "v_scale": jnp.zeros(sshape, dtype)}
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        return {"k": cache_zeros(shape, jnp.int8, sh.get("k")),
+                "v": cache_zeros(shape, jnp.int8, sh.get("v")),
+                "k_scale": cache_zeros(sshape, dtype, sh.get("k_scale")),
+                "v_scale": cache_zeros(sshape, dtype, sh.get("v_scale"))}
+    return {"k": cache_zeros(shape, dtype, sh.get("k")),
+            "v": cache_zeros(shape, dtype, sh.get("v"))}
 
 
 def quantize_kv(x):
@@ -379,20 +395,25 @@ def _scatter_slot(cache, new, slot, active=None):
 
 # -- paged KV cache ---------------------------------------------------------
 def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, num_blocks: int,
-                        block_size: int, dtype=None) -> Params:
+                        block_size: int, dtype=None,
+                        shardings=None) -> Params:
     """Paged KV cache: a shared pool of ``num_blocks`` physical blocks
     of ``block_size`` tokens each, per layer. No per-slot rows exist —
     slots own blocks through a host-side block table (serving engine).
     Layout (n_layers, num_blocks, block_size, Hkv, hd) keeps the
     per-token tail identical to the contiguous cache, so the gather
-    ``pages[block_table]`` reproduces a dense row bit-for-bit."""
+    ``pages[block_table]`` reproduces a dense row bit-for-bit.
+    ``shardings``: optional {"k": ..., "v": ...} jax shardings (the
+    sharded serving engine's kv-head-split pool)."""
     if cfg.kv_cache_dtype == "int8":
         raise NotImplementedError("paged KV cache is fp-only for now "
                                   "(int8 scales need a paged layout too)")
     dtype = dtype or jnp.dtype(cfg.dtype)
+    sh = shardings or {}
     hd = cfg.resolved_head_dim
     shape = (n_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"k": cache_zeros(shape, dtype, sh.get("k")),
+            "v": cache_zeros(shape, dtype, sh.get("v"))}
 
 
 def _paged_flat(pages):

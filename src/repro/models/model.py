@@ -344,55 +344,77 @@ def _ssm_forward(params, cfg, x):
 # ===========================================================================
 # decode path (serve_step)
 # ===========================================================================
+def _shard_tree(tree: Params, shardings) -> Params:
+    """device_put every leaf under its sharding — the post-hoc path for
+    cache subtrees whose init reshapes/broadcasts after creation (VLM
+    grouped kv, SSM state stacks), where creating directly under the
+    final sharding isn't possible. ``shardings`` must mirror ``tree``
+    with one jax.sharding.Sharding per leaf."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               frontend_len: Optional[int] = None) -> Params:
-    """cache_len: max context (or window size for windowed attention)."""
+               frontend_len: Optional[int] = None,
+               shardings=None) -> Params:
+    """cache_len: max context (or window size for windowed attention).
+
+    ``shardings``: optional pytree of jax shardings mirroring the
+    returned cache (distributed/sharding.serving_cache_specs +
+    to_named) — KV leaves are created directly under their sharding
+    (kv-head dim over the model axis for the sharded serving engine);
+    subtrees built by reshape/broadcast are device_put after."""
     dtype = jnp.dtype(cfg.dtype)
     fam = cfg.family
+    sh = shardings or {}
     eff_len = min(cache_len, cfg.attention_window) \
         if cfg.attention_window else cache_len
     cache: Params = {}
     if fam in (DENSE, MOE):
         if cfg.mla is not None:
-            cache["kv"] = MLA.init_mla_cache(cfg, cfg.num_layers, batch,
-                                             eff_len, dtype)
+            cache["kv"] = _shard_tree(
+                MLA.init_mla_cache(cfg, cfg.num_layers, batch, eff_len,
+                                   dtype), sh.get("kv"))
         else:
             cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch,
-                                          eff_len, dtype)
+                                          eff_len, dtype,
+                                          shardings=sh.get("kv"))
     elif fam == VLM:
         n_groups = cfg.num_layers // cfg.cross_attn_every
         cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch, eff_len,
                                       dtype)
-        cache["kv"] = jax.tree.map(
+        cache["kv"] = _shard_tree(jax.tree.map(
             lambda a: a.reshape(n_groups, cfg.cross_attn_every, *a.shape[1:]),
-            cache["kv"])
+            cache["kv"]), sh.get("kv"))
         f = frontend_len or cfg.frontend_tokens
         hd = cfg.resolved_head_dim
-        cache["xk"] = jnp.zeros((n_groups, batch, f, cfg.num_kv_heads, hd),
-                                dtype)
-        cache["xv"] = jnp.zeros_like(cache["xk"])
+        xshape = (n_groups, batch, f, cfg.num_kv_heads, hd)
+        cache["xk"] = L.cache_zeros(xshape, dtype, sh.get("xk"))
+        cache["xv"] = L.cache_zeros(xshape, dtype, sh.get("xv"))
     elif fam == ENCDEC:
         cache["kv"] = L.init_kv_cache(cfg, cfg.num_layers, batch, eff_len,
-                                      dtype)
+                                      dtype, shardings=sh.get("kv"))
         f = frontend_len or cfg.frontend_tokens
         hd = cfg.resolved_head_dim
-        cache["xk"] = jnp.zeros((cfg.num_layers, batch, f, cfg.num_kv_heads,
-                                 hd), dtype)
-        cache["xv"] = jnp.zeros_like(cache["xk"])
+        xshape = (cfg.num_layers, batch, f, cfg.num_kv_heads, hd)
+        cache["xk"] = L.cache_zeros(xshape, dtype, sh.get("xk"))
+        cache["xv"] = L.cache_zeros(xshape, dtype, sh.get("xv"))
     elif fam == HYBRID:
         every = cfg.ssm.shared_attn_every
         n_groups, rem = divmod(cfg.num_layers, every)
         st = S.init_mamba2_state(cfg, batch)
-        cache["ssm"] = jax.tree.map(
+        cache["ssm"] = _shard_tree(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape
                                        ).copy() if rem == 0 else
-            jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), st)
+            jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), st),
+            sh.get("ssm"))
         hd = cfg.resolved_head_dim
+        kvsh = sh.get("kv") or {}
+        kshape = (n_groups, batch, eff_len, cfg.num_kv_heads, hd)
         cache["kv"] = {
-            "k": jnp.zeros((n_groups, batch, eff_len, cfg.num_kv_heads, hd),
-                           dtype),
-            "v": jnp.zeros((n_groups, batch, eff_len, cfg.num_kv_heads, hd),
-                           dtype)}
+            "k": L.cache_zeros(kshape, dtype, kvsh.get("k")),
+            "v": L.cache_zeros(kshape, dtype, kvsh.get("v"))}
     elif fam == SSM:
         pattern = cfg.ssm.block_pattern or ("mlstm",)
         n_groups = cfg.num_layers // len(pattern)
@@ -403,12 +425,12 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
             stacks[f"blk{i}_{kind}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(),
                 st)
-        cache["ssm"] = stacks
+        cache["ssm"] = _shard_tree(stacks, sh.get("ssm"))
     return cache
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int,
-                     block_size: int) -> Params:
+                     block_size: int, shardings=None) -> Params:
     """Paged KV cache: one shared pool of ``num_blocks`` physical
     blocks per layer (models/layers.init_paged_kv_cache). No batch
     axis exists — slots own blocks via the engine's block tables, so
@@ -416,6 +438,8 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
 
     Supported for the contiguous-cache attention families (dense/MoE,
     full attention, fp KV) — the paper's serving model (Llama-3-70B).
+    ``shardings``: optional cache-shaped pytree of jax shardings (the
+    sharded engine's kv-head-split block pool).
     """
     if cfg.family not in (DENSE, MOE) or cfg.mla is not None:
         raise NotImplementedError(
@@ -425,8 +449,10 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
         raise NotImplementedError(
             "windowed attention already bounds KV by the window; paging "
             "it would page a ring buffer — unsupported")
+    sh = shardings or {}
     return {"kv": L.init_paged_kv_cache(cfg, cfg.num_layers, num_blocks,
-                                        block_size)}
+                                        block_size,
+                                        shardings=sh.get("kv"))}
 
 
 def paged_decode_step(params: Params, cfg: ModelConfig, token,

@@ -64,6 +64,24 @@ without donation XLA keeps the input and output cache alive across
 every step — a 2x HBM tax on exactly the resource this engine
 economizes. (CPU ignores donation; on TPU the buffer is reused.)
 
+The engine is MESH-AWARE (DESIGN.md §Sharded serving): pass ``mesh``
+(usually one ``launch/mesh.make_submeshes`` replica submesh) and every
+jitted step runs under jax.sharding — params sharded by the
+Megatron-style ``distributed/sharding.py`` rules, the KV cache (dense
+rows or the paged block pool) sharded over the model axis on the
+kv-head dim (``serving_cache_specs``; sequence/block-dim fallback when
+kv-heads don't divide), while the device-resident slot state
+``(last_tok, pos, active, budget)`` and the block table REPLICATE
+(slot scheduling is host-side bookkeeping; a sharded scheduler would
+put admits on a collective path). The dirty-tracked re-uploads attach
+the replicated NamedSharding; step outputs are pinned to the cache
+shardings with with_sharding_constraint so donation reuses the sharded
+buffers. Output tokens are pinned bitwise against the 1-device engine
+(tests/test_decode_consistency.py, host-platform mesh). The Pallas
+decode kernels are single-device programs — a sharded engine serves
+through the XLA reference path instead (``pallas_fallback``; kernel
+shard_map integration is out of scope).
+
 The engine is functional at the device boundary: all device state lives
 in ``self.cache`` (a pytree) and is updated by jit'd steps. Slot and
 block bookkeeping (which request occupies which slot, which physical
@@ -82,9 +100,12 @@ from typing import Dict, List, Optional, Set, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core.profiles import DEFAULT_KV_BLOCK
+from repro.distributed import sharding as SH
+from repro.distributed.context import ParallelContext, make_context
 from repro.models import model as M
 
 
@@ -127,7 +148,8 @@ class InferenceEngine:
                  decode_impl: str = "xla", paged: bool = False,
                  block_size: int = DEFAULT_KV_BLOCK,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = False, decode_k: int = 1):
+                 prefix_cache: bool = False, decode_k: int = 1,
+                 mesh=None, parallel: Optional[ParallelContext] = None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
@@ -135,6 +157,31 @@ class InferenceEngine:
         if prefix_cache and not paged:
             raise ValueError("prefix_cache=True needs the paged KV cache "
                              "(block granularity is what gets shared)")
+        # -- mesh / tensor parallel (DESIGN.md §Sharded serving) -----------
+        self.mesh = mesh
+        self.parallel = (parallel or make_context(mesh)) \
+            if mesh is not None else None
+        self.tp_degree = int(mesh.shape[self.parallel.model_axis]) \
+            if mesh is not None else 1
+        self.pallas_fallback = False
+        if mesh is not None and decode_impl == "pallas":
+            # The Pallas decode kernels are single-device programs;
+            # driving them over a mesh-sharded cache needs a shard_map
+            # integration that is explicitly out of scope. A sharded
+            # engine serves through the XLA reference path (bitwise-
+            # pinned against Pallas on one device by the PR-5 tests).
+            decode_impl = "xla"
+            self.pallas_fallback = True
+        assert mesh is None or decode_impl != "pallas", \
+            "sharded engine must not reach the Pallas kernels"
+        self.decode_impl = decode_impl
+        if mesh is not None:
+            # replicated NamedSharding for scheduler-state uploads
+            self._replicated = NamedSharding(mesh, PartitionSpec())
+            pspecs = SH.param_specs(params, self.parallel)
+            params = jax.device_put(params, SH.to_named(pspecs, mesh))
+        else:
+            self._replicated = None
         self.cfg = cfg
         self.params = params
         self.n_max = n_max
@@ -153,8 +200,12 @@ class InferenceEngine:
             # n_max at the same num_blocks (profiles.n_max_paged).
             self.num_blocks = (num_blocks if num_blocks is not None
                                else n_max * self.blocks_per_slot)
+            self._cache_shardings = self._serving_shardings(
+                lambda: M.init_paged_cache(cfg, self.num_blocks,
+                                           block_size), paged=True)
             self.cache = M.init_paged_cache(cfg, self.num_blocks,
-                                            block_size)
+                                            block_size,
+                                            shardings=self._cache_shardings)
             # host-side allocator state (free list + per-slot tables)
             self._free: List[int] = list(range(self.num_blocks))
             self._reserved = 0          # worst-case blocks not yet alloc'd
@@ -189,7 +240,10 @@ class InferenceEngine:
             # step would put a host->device copy on the hot path)
             self._bt_device = None
         else:
-            self.cache = M.init_cache(cfg, n_max, c_max)
+            self._cache_shardings = self._serving_shardings(
+                lambda: M.init_cache(cfg, n_max, c_max), paged=False)
+            self.cache = M.init_cache(cfg, n_max, c_max,
+                                      shardings=self._cache_shardings)
         # chain hashes memoized for WAITING requests (keyed by rid;
         # dropped on admit/refuse) — the FIFO head re-probes every
         # iteration while blocked and must not rehash its prompt.
@@ -266,6 +320,63 @@ class InferenceEngine:
                 donate_argnums=(1, 2, 3, 4, 5))
             self._mixed = jax.jit(partial(self._mixed_fn, decode_impl),
                                   donate_argnums=1)
+
+    # -- mesh sharding (DESIGN.md §Sharded serving) ------------------------
+    def _serving_shardings(self, abstract_init, paged: bool):
+        """NamedSharding pytree for the engine cache (None on a
+        1-device engine): kv-head dim over the model axis, guarded
+        seq/block fallback — specs from serving_cache_specs over the
+        abstract (eval_shape) cache structure, so no cache is ever
+        materialized just to learn its shapes."""
+        if self.mesh is None:
+            return None
+        struct = jax.eval_shape(abstract_init)
+        specs = SH.serving_cache_specs(struct, self.parallel, paged=paged)
+        return SH.to_named(specs, self.mesh)
+
+    def _constrain_cache(self, cache):
+        """Pin a step-OUTPUT cache to the engine's shardings inside
+        jit. Scatters/dynamic_update_slice leave GSPMD free to
+        re-propagate layouts per trace; the constraint keeps every
+        output bitwise-stably sharded like its (donated) input, so the
+        donation reuses the sharded buffers."""
+        if self._cache_shardings is None:
+            return cache
+        return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                            self._cache_shardings)
+
+    def _upload(self, host_array):
+        """Host->device upload of scheduler state (tokens, positions,
+        masks, budgets, block tables): REPLICATED across the mesh when
+        sharded — slot state is host-scheduled and every device needs
+        the full view. Callers pass snapshots (np.array copies; the
+        async-aliasing rule from PR 1 applies unchanged)."""
+        if self._replicated is not None:
+            return jax.device_put(np.asarray(host_array), self._replicated)
+        return jnp.asarray(host_array)
+
+    def devices(self) -> List:
+        """Devices this engine replica occupies (placement printing /
+        fleet accounting); a 1-device engine reports the default
+        device."""
+        if self.mesh is not None:
+            return list(self.mesh.devices.flat)
+        return [jax.devices()[0]]
+
+    def cache_bytes_per_device(self) -> int:
+        """Max KV-cache bytes resident on any ONE device — the
+        per-device HBM figure profiles.devices_per_replica models
+        (~1/tp of the total under the kv-head sharding)."""
+        per_dev: Dict[int, int] = {}
+        for leaf in jax.tree.leaves(self.cache):
+            shards = getattr(leaf, "addressable_shards", None)
+            if shards:
+                for s in shards:
+                    per_dev[s.device.id] = \
+                        per_dev.get(s.device.id, 0) + s.data.nbytes
+            else:
+                per_dev[-1] = per_dev.get(-1, 0) + leaf.nbytes
+        return max(per_dev.values(), default=0)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
@@ -599,9 +710,12 @@ class InferenceEngine:
 
     def _block_table_device(self):
         """Device block table, re-uploaded only after allocator writes
-        (snapshot semantics: np.array copy, never a live alias)."""
+        (snapshot semantics: np.array copy, never a live alias);
+        REPLICATED across the mesh when sharded — block indices address
+        the pool's unsharded physical-block dim, so every device reads
+        the same table."""
         if self._bt_device is None:
-            self._bt_device = jnp.asarray(np.array(self.block_tables))
+            self._bt_device = self._upload(np.array(self.block_tables))
         return self._bt_device
 
     def _release_slot(self, s: int) -> None:
@@ -672,13 +786,13 @@ class InferenceEngine:
         _, cache = M.prefill_chunk(params, self.cfg, tokens, cache,
                                    start_pos, lengths,
                                    decode_impl=decode_impl)
-        return cache
+        return self._constrain_cache(cache)
 
     def _paged_prefill_fn(self, params, cache, tokens, block_tables,
                           start_pos, lengths):
         _, cache = M.paged_prefill_chunk(params, self.cfg, tokens, cache,
                                          block_tables, start_pos, lengths)
-        return cache
+        return self._constrain_cache(cache)
 
     def _bucket_chunks(self, chunks: Dict[int, List[int]]):
         """Pad pending chunks into the smallest covering bucket shape
@@ -703,13 +817,13 @@ class InferenceEngine:
         start = np.array(self.slot_pos, np.int32)
         if self.paged:
             self.cache = self._prefill_step(
-                self.params, self.cache, jnp.asarray(tokens),
-                self._block_table_device(), jnp.asarray(start),
-                jnp.asarray(lengths))
+                self.params, self.cache, self._upload(tokens),
+                self._block_table_device(), self._upload(start),
+                self._upload(lengths))
         else:
             self.cache = self._prefill_step(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(start), jnp.asarray(lengths))
+                self.params, self.cache, self._upload(tokens),
+                self._upload(start), self._upload(lengths))
         self.dispatches += 1
         self._advance_prefill_host(chunks)
 
@@ -742,7 +856,8 @@ class InferenceEngine:
     def _decode_fn(self, decode_impl, params, cache, tokens, pos, active):
         logits, cache = M.decode_step(params, self.cfg, tokens, cache, pos,
                                       decode_impl=decode_impl, active=active)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            self._constrain_cache(cache)
 
     def _paged_decode_fn(self, decode_impl, params, cache, tokens,
                          block_tables, pos, active):
@@ -750,7 +865,8 @@ class InferenceEngine:
                                             block_tables, pos,
                                             decode_impl=decode_impl,
                                             active=active)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            self._constrain_cache(cache)
 
     # -- multi-step decode scan (DESIGN.md §Engine hot path) ---------------
     def _scan_body(self, decode_impl, params, block_tables, carry):
@@ -768,6 +884,10 @@ class InferenceEngine:
             logits, cache = M.paged_decode_step(
                 params, self.cfg, tok[:, None], cache, block_tables, pos,
                 decode_impl=decode_impl, active=active)
+        # keep every micro-iteration's carry pinned to the cache
+        # shardings (a drifting layout inside the scan would insert a
+        # reshard collective per step)
+        cache = self._constrain_cache(cache)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # -1 marks rows that emitted nothing this micro-iteration; the
         # host replay stops at the first -1 per row
@@ -805,7 +925,8 @@ class InferenceEngine:
         logits, cache = M.mixed_step(params, self.cfg, tokens, cache, pos,
                                      lengths, decode_toks, active,
                                      decode_impl=decode_impl)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            self._constrain_cache(cache)
 
     def _paged_mixed_fn(self, decode_impl, params, cache, tokens,
                         block_tables, pos, lengths, decode_toks, active):
@@ -813,7 +934,8 @@ class InferenceEngine:
                                            block_tables, pos, lengths,
                                            decode_toks, active,
                                            decode_impl=decode_impl)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            self._constrain_cache(cache)
 
     def _device_decode_state(self, mask: np.ndarray):
         """Device-resident (tok, pos, active, budget), re-uploaded ONLY
@@ -828,10 +950,10 @@ class InferenceEngine:
                 if req is not None:
                     budget[s] = req.max_new_tokens - len(self.slot_out[s])
             self._dev_state = (
-                jnp.asarray(np.array(self.slot_last_tok, np.int32)),
-                jnp.asarray(np.array(self.slot_pos, np.int32)),
-                jnp.asarray(np.array(mask)),
-                jnp.asarray(budget))
+                self._upload(np.array(self.slot_last_tok, np.int32)),
+                self._upload(np.array(self.slot_pos, np.int32)),
+                self._upload(np.array(mask)),
+                self._upload(budget))
             self._dev_dirty = False
         return self._dev_state
 
@@ -861,17 +983,17 @@ class InferenceEngine:
     def _run_decode(self, mask: np.ndarray) -> None:
         # snapshot host state (see _run_prefill_chunks: async dispatch
         # must never observe the in-place updates below)
-        toks = jnp.asarray(np.array(self.slot_last_tok[:, None]))
-        pos = jnp.asarray(np.array(self.slot_pos))
+        toks = self._upload(np.array(self.slot_last_tok[:, None]))
+        pos = self._upload(np.array(self.slot_pos))
         if self.paged:
             next_tok, self.cache = self._decode(self.params, self.cache,
                                                 toks,
                                                 self._block_table_device(),
-                                                pos, jnp.asarray(mask))
+                                                pos, self._upload(mask))
         else:
             next_tok, self.cache = self._decode(self.params, self.cache,
                                                 toks, pos,
-                                                jnp.asarray(mask))
+                                                self._upload(mask))
         self.dispatches += 1
         self.decode_dispatches += 1
         self._decode_only_tokens += int(mask.sum())
@@ -927,17 +1049,17 @@ class InferenceEngine:
         iteration previously cost two host dispatches."""
         tokens, lengths = self._bucket_chunks(chunks)
         # snapshot host state (async-dispatch aliasing rule)
-        pos = jnp.asarray(np.array(self.slot_pos, np.int32))
-        toks = jnp.asarray(np.array(self.slot_last_tok[:, None]))
+        pos = self._upload(np.array(self.slot_pos, np.int32))
+        toks = self._upload(np.array(self.slot_last_tok[:, None]))
         if self.paged:
             next_tok, self.cache = self._mixed(
-                self.params, self.cache, jnp.asarray(tokens),
-                self._block_table_device(), pos, jnp.asarray(lengths),
-                toks, jnp.asarray(mask))
+                self.params, self.cache, self._upload(tokens),
+                self._block_table_device(), pos, self._upload(lengths),
+                toks, self._upload(mask))
         else:
             next_tok, self.cache = self._mixed(
-                self.params, self.cache, jnp.asarray(tokens), pos,
-                jnp.asarray(lengths), toks, jnp.asarray(mask))
+                self.params, self.cache, self._upload(tokens), pos,
+                self._upload(lengths), toks, self._upload(mask))
         self.dispatches += 1
         self._dev_dirty = True
         next_tok = np.asarray(next_tok)

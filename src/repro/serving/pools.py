@@ -67,7 +67,8 @@ class FleetRuntime:
                  n_maxes: Sequence[int], c_maxes: Sequence[int],
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False, decode_k: int = 1):
+                 prefix_cache: bool = False, decode_k: int = 1,
+                 mesh=None, tp_degree: int = 1):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -77,6 +78,22 @@ class FleetRuntime:
                 raise ValueError(
                     f"pool {i} context {c_maxes[i]} < its boundary {b}: "
                     "compressed requests could overflow the KV cache")
+        # -- multi-device placement (DESIGN.md §Sharded serving) -----------
+        # mesh + tp_degree place each pool's engine replica on its own
+        # submesh of tp_degree devices (launch/mesh.make_submeshes);
+        # with fewer submeshes than pools, placement wraps round-robin
+        # (pools then time-share devices — fine on a CPU smoke host,
+        # a real fleet provisions enough devices per plan).
+        if mesh is not None:
+            from repro.launch.mesh import make_submeshes
+            subs = make_submeshes(mesh, tp_degree)
+            self._submeshes = [subs[i % len(subs)] for i in range(k)]
+        else:
+            if tp_degree != 1:
+                raise ValueError("tp_degree > 1 needs a mesh to carve "
+                                 "replica submeshes from")
+            self._submeshes = [None] * k
+        self.tp_degree = tp_degree
         self.cfg = cfg
         self.tokenizer = ByteChunkTokenizer(cfg.vocab_size)
         self.router = GatewayRouter(boundaries=boundaries, gammas=gammas,
@@ -97,9 +114,16 @@ class FleetRuntime:
                                       c_chunk, paged=paged,
                                       block_size=kv_block_size,
                                       prefix_cache=prefix_cache,
-                                      decode_k=decode_k)
+                                      decode_k=decode_k,
+                                      mesh=self._submeshes[i])
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
+
+    def device_placement(self) -> Dict[str, List[int]]:
+        """pool name -> device ids its engine replica spans (one id on
+        a single-device runtime)."""
+        return {name: [d.id for d in eng.devices()]
+                for name, eng in self.engines.items()}
 
     @classmethod
     def from_plan(cls, cfg: ModelConfig, params, plan: FleetPlan,
@@ -108,7 +132,8 @@ class FleetRuntime:
                   paged: bool = False,
                   kv_block_size: int = DEFAULT_KV_BLOCK,
                   prefix_cache: bool = False,
-                  decode_k: int = 1) -> "FleetRuntime":
+                  decode_k: int = 1,
+                  mesh=None, tp_degree: int = 1) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -131,7 +156,7 @@ class FleetRuntime:
         return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
                    c_maxes, c_chunk, paged=paged,
                    kv_block_size=kv_block_size, prefix_cache=prefix_cache,
-                   decode_k=decode_k)
+                   decode_k=decode_k, mesh=mesh, tp_degree=tp_degree)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -189,9 +214,11 @@ class TwoPoolRuntime(FleetRuntime):
                  n_max_short: int, n_max_long: int, c_max_long: int,
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False, decode_k: int = 1):
+                 prefix_cache: bool = False, decode_k: int = 1,
+                 mesh=None, tp_degree: int = 1):
         super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
                          c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
                          paged=paged, kv_block_size=kv_block_size,
-                         prefix_cache=prefix_cache, decode_k=decode_k)
+                         prefix_cache=prefix_cache, decode_k=decode_k,
+                         mesh=mesh, tp_degree=tp_degree)

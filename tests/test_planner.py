@@ -98,6 +98,49 @@ def test_profile_for_arch():
     assert p_ssm.n_max(4096) == p_ssm.n_max(65536)   # flat cliff (rho=1)
 
 
+def test_sharded_profile_identity_at_one_device():
+    """devices_per_replica=1 (the default) must be a bit-for-bit no-op:
+    sharded(1) returns the same object and the K=2 plan is identical."""
+    p = A100_LLAMA70B
+    assert p.sharded(1) is p
+    w = get_workload("azure")
+    base = plan_two_pool(w, LAM, SLO, p, w.b_short, 1.5)
+    again = plan_two_pool(w, LAM, SLO, p.sharded(1), w.b_short, 1.5)
+    assert base == again
+
+
+def test_sharded_profile_scaling():
+    """tp=4 replicas: 4x slot budget, scale-invariant t_iter, 1/4
+    per-device KV bytes, 4x per-'GPU' annual cost."""
+    p = A100_LLAMA70B
+    p4 = p.sharded(4)
+    assert p4.name.endswith(":tp4")
+    assert p4.n_max(65536) == 4 * p.n_max(65536)
+    # aggregate bandwidth cancels the larger slot count
+    assert p4.t_iter(65536) == pytest.approx(p.t_iter(65536))
+    assert p4.kv_bytes_per_slot(65536, per_device=True) \
+        == p.kv_bytes_per_slot(65536) // 4
+    assert p4.kv_bytes_per_slot(65536) == p.kv_bytes_per_slot(65536)
+    assert p4.annual_cost(10) == pytest.approx(4 * p.annual_cost(10))
+    assert p4.n_max_paged(4096.0) == 4 * p.n_max_paged(4096.0)
+    with pytest.raises(ValueError):
+        p.sharded(0)
+
+
+def test_sharded_profile_fewer_replicas_same_slo():
+    """A tp=4 plan needs ~1/4 the replicas of the tp=1 plan at the
+    same SLO (each replica packs 4x the slots at the same t_iter) but
+    bills a comparable number of accelerators."""
+    w = get_workload("azure")
+    p1, p4 = A100_LLAMA70B, A100_LLAMA70B.sharded(4)
+    plan1 = plan_two_pool(w, LAM, SLO, p1, w.b_short, 1.5)
+    plan4 = plan_two_pool(w, LAM, SLO, p4, w.b_short, 1.5)
+    assert plan4.total_gpus < plan1.total_gpus
+    # replicas bill all their devices: within ~2x of the tp=1 bill
+    # (discretization: ceil() over fewer, bigger units)
+    assert plan4.annual_cost <= 2 * plan1.annual_cost
+
+
 def test_infeasible_slo():
     w = get_workload("agent-heavy")
     with pytest.raises(Infeasible):

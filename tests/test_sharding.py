@@ -98,3 +98,81 @@ def test_expert_dim_sharded():
     specs = SH.param_specs(shapes, CTX)
     wg = specs["layers"]["moe"]["w_gate"]
     assert wg[1] == "model"      # (L, E, D, F): expert dim sharded
+
+
+# --- sharding_options context manager --------------------------------------
+
+def test_sharding_options_scoped_restore():
+    baseline = dict(SH.OPTIONS)
+    other = "lora" if baseline["mla_cache"] == "seq" else "seq"
+    with SH.sharding_options(mla_cache=other) as opts:
+        assert opts["mla_cache"] == other
+        assert SH.OPTIONS["mla_cache"] == other
+    assert SH.OPTIONS == baseline
+
+
+def test_sharding_options_restores_on_exception():
+    baseline = dict(SH.OPTIONS)
+    other = "lora" if baseline["mla_cache"] == "seq" else "seq"
+    with pytest.raises(RuntimeError):
+        with SH.sharding_options(mla_cache=other):
+            raise RuntimeError("boom")
+    assert SH.OPTIONS == baseline
+
+
+def test_sharding_options_rejects_unknown_key():
+    baseline = dict(SH.OPTIONS)
+    with pytest.raises(KeyError):
+        with SH.sharding_options(not_an_option=1):
+            pass
+    assert SH.OPTIONS == baseline
+
+
+# --- serving_cache_specs ---------------------------------------------------
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, np.float32)
+
+
+def test_serving_cache_specs_head_sharded_slots_replicated():
+    # dense (L, B, S, Hkv, hd): 16 kv-heads divide the 16-way axis
+    cache = {"k": _sds(2, 3, 128, 16, 64), "v": _sds(2, 3, 128, 16, 64)}
+    specs = SH.serving_cache_specs(cache, CTX)
+    assert specs["k"] == P(None, None, None, "model", None)
+    assert specs["v"] == P(None, None, None, "model", None)
+
+
+def test_serving_cache_specs_dense_seq_fallback():
+    # 8 kv-heads don't divide 16 -> context-parallel over the seq dim
+    cache = {"k": _sds(2, 3, 128, 8, 64)}
+    specs = SH.serving_cache_specs(cache, CTX)
+    assert specs["k"] == P(None, None, "model", None, None)
+
+
+def test_serving_cache_specs_replicates_when_nothing_divides():
+    cache = {"k": _sds(2, 3, 100, 8, 64)}
+    specs = SH.serving_cache_specs(cache, CTX)
+    assert specs["k"] == P(None, None, None, None, None)
+
+
+def test_serving_cache_specs_paged_block_fallback():
+    # paged pool (L, P, bs, Hkv, hd): heads indivisible -> shard the
+    # physical-block dim, never the block-size (token) dim
+    cache = {"k": _sds(2, 32, 16, 8, 64)}
+    specs = SH.serving_cache_specs(cache, CTX, paged=True)
+    assert specs["k"] == P(None, "model", None, None, None)
+
+
+def test_serving_cache_specs_int8_scales_follow_values():
+    # int8 scales (L, B, S, Hkv): head dim is LAST here
+    cache = {"k_scale": _sds(2, 3, 128, 16), "v_scale": _sds(2, 3, 128, 8)}
+    specs = SH.serving_cache_specs(cache, CTX)
+    assert specs["k_scale"] == P(None, None, None, "model")
+    assert specs["v_scale"] == P(None, None, "model", None)   # seq fallback
+
+
+def test_serving_cache_specs_non_kv_leaves_replicate():
+    # ssm/recurrent state has no kv-head dim: always replicated
+    cache = {"ssm": {"state": _sds(2, 3, 16, 64)}}
+    specs = SH.serving_cache_specs(cache, CTX)
+    assert specs["ssm"]["state"] == P(None, None, None, None)
