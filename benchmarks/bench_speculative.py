@@ -1,24 +1,164 @@
-"""Beyond-paper: speculative decoding priced by the FleetOpt formalism.
+"""Self-speculative decoding: measured engine speedup + FleetOpt pricing.
 
-The prefix-cache bench showed fleet size is occupancy-bound:
-E[S] ~ L_out * t_iter. Speculative decoding accepts kappa tokens per
-target-model iteration on average, so
+Two parts (beyond-paper; DESIGN.md §Speculative decoding):
 
-    E[S] = (ceil(L_in/C_chunk) + L_out / kappa) * t_iter',
+1. **Measured** — the real `InferenceEngine` with `spec_k > 1` on an
+   agent-loop workload. The model is the hot-path bench's tiny config
+   with the residual stream collapsed to the token embedding (attention
+   and MLP output projections zeroed) and an `lm_head` built so greedy
+   decode walks a fixed token cycle. Greedy output is then perfectly
+   periodic — the idealized agent-style repetitive stream (tool-call
+   loops, retry templates) where prompt-lookup drafting is at its
+   acceptance ceiling — so the sweep measures the ENGINE's speculative
+   mechanics (verify-window dispatch amortization) at acceptance ~1.0,
+   decoupled from model-specific acceptance rates. Output tokens must
+   stay BITWISE identical to the spec_k=1 engine (the `token_parity`
+   flag below; tests/test_speculative.py pins the same invariant on
+   natural streams where acceptance is partial).
+2. **Analytic** — the original occupancy pricing: an accepted-tokens-
+   per-iteration rate kappa shrinks decode occupancy E[S] by ~1/kappa,
+   so the PR+C&R fleet shrinks almost proportionally. Now expressed
+   through `HardwareProfile.speculative(kappa, overhead)` — the same
+   calibrated-profile path `core.planner.size_pool` consumes when a
+   serving tier reports its measured kappa back to the planner.
 
-with t_iter' = t_iter * (1 + draft_overhead). This bench sizes the
-PR+C&R fleet at kappa in {1, 2, 3} (draft overhead 15 %): the
-occupancy-side complement to C&R — fleet size tracks ~1/kappa almost
-exactly, unlike prefix caching."""
-from benchmarks.common import emit
-from repro.core import planner as PL
-from repro.core.profiles import A100_LLAMA70B
-from repro.core.workload import get_workload
+Writes benchmarks/results/speculative_*.csv and the repo-root
+``BENCH_speculative.json`` perf-trajectory record, gated by
+benchmarks/check_regression.py: the speedup is MACHINE-RELATIVE
+(spec_k>1 and spec_k=1 timed back-to-back on the same host) and the
+``token_parity`` flag is deterministic — any False fails CI hard.
+"""
+import json
+import os
+import sys
+import time
 
-DRAFT_OVERHEAD = 0.15
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np                                               # noqa: E402
+
+from benchmarks.common import emit                               # noqa: E402
+from benchmarks.bench_engine_hotpath import _tiny_cfg            # noqa: E402
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_speculative.json")
+
+DRAFT_OVERHEAD = 0.15      # host proposer + wider verify window, fractional
+CYCLE = 48                 # agent-loop period, > max draft span k*W-1
+N_MAX, C_MAX, C_CHUNK = 4, 512, 32
+PROMPT_LEN, MAX_NEW = 64, 160
+DECODE_K = 4
+W_SWEEP = (2, 4, 8)
+HEADLINE_W = 4             # the README/regression-gate operating point
 
 
-def run(lam: float = 1000.0, t_slo: float = 0.5):
+# ---------------------------------------------------------------------------
+# part 1: measured engine
+# ---------------------------------------------------------------------------
+def agent_loop_model(cycle: int = CYCLE, seed: int = 0):
+    """Tiny model whose greedy continuation is a pure token cycle.
+
+    Zeroing ``attn.wo`` and ``mlp.down`` makes every residual block a
+    no-op, so the final hidden state is the (rms-normed) embedding of
+    the last token alone; the constructed ``lm_head`` then maps cycle
+    token t to t+1 mod ``cycle`` (near-orthogonal random embeddings
+    make the self-dot argmax exact). Greedy decode from any in-cycle
+    prompt walks the cycle forever — and because the continuation is
+    a pure function of the last token, every n-gram draft the
+    prompt-lookup proposer copies from history is CORRECT, pinning
+    acceptance at 1.0. Shared with tests/test_speculative.py, which
+    uses the same construction for deterministic acceptance scenarios.
+
+    Returns (cfg, params, cycle).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as M
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    params["layers"]["attn"]["wo"] = jnp.zeros_like(
+        params["layers"]["attn"]["wo"])
+    params["layers"]["mlp"]["down"] = jnp.zeros_like(
+        params["layers"]["mlp"]["down"])
+    emb = np.asarray(params["embed"], np.float32)
+    g = np.asarray(params["final_ln"], np.float32)
+    h = emb / np.sqrt((emb ** 2).mean(-1, keepdims=True) + 1e-5) * g
+    u = h / np.linalg.norm(h, axis=-1, keepdims=True)
+    head = np.zeros((cfg.d_model, cfg.vocab_size), np.float32)
+    for t in range(cycle):
+        head[:, (t + 1) % cycle] = u[t] * 4.0
+    params["lm_head"] = jnp.asarray(head)
+    return cfg, params, cycle
+
+
+def _wave(cycle, starts, base_rid):
+    """One admission wave of in-cycle prompts (rotated per request)."""
+    from repro.serving.engine import ServeRequest
+    return [ServeRequest(rid=base_rid + i,
+                         tokens=[(s + j) % cycle for j in range(PROMPT_LEN)],
+                         max_new_tokens=MAX_NEW)
+            for i, s in enumerate(starts)]
+
+
+def _measure(cfg, params, cycle, spec_k, quick):
+    """Steady-state decode tok/s at one spec_k (best-of-N waves, same
+    protocol as bench_engine_hotpath: wave 0 compiles every trace, the
+    timed waves never see a cold dispatch). Returns the wave outputs
+    too — the parity reference across the sweep."""
+    from repro.serving.engine import InferenceEngine
+    eng = InferenceEngine(cfg, params, n_max=N_MAX, c_max=C_MAX,
+                          c_chunk=C_CHUNK, eos_id=None,
+                          decode_k=DECODE_K, spec_k=spec_k)
+    rng = np.random.default_rng(0)
+    starts = [int(rng.integers(0, cycle)) for _ in range(N_MAX)]
+    for r in _wave(cycle, starts, 0):
+        eng.submit(r)
+    res = eng.run_to_completion(10 ** 6)          # warm: compile
+    outs = [res[i].output_tokens for i in range(N_MAX)]
+    best = 0.0
+    for rep in range(2 if quick else 4):
+        for r in _wave(cycle, starts, 100 * (rep + 1)):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_to_completion(10 ** 9)
+        dt = time.perf_counter() - t0
+        best = max(best, N_MAX * MAX_NEW / dt)
+    return best, outs, eng
+
+
+def run_engine(quick: bool = False):
+    """The measured sweep: spec_k in W_SWEEP vs the plain spec_k=1
+    engine, bitwise parity checked across every run."""
+    cfg, params, cycle = agent_loop_model()
+    base_tps, base_out, _ = _measure(cfg, params, cycle, 1, quick)
+    rows, parity = [], True
+    rows.append({"spec_k": 1, "kappa": 1.0, "acceptance": "-",
+                 "decode_tok_per_s": round(base_tps, 1),
+                 "speedup_vs_plain": 1.0, "token_parity": True})
+    for w in W_SWEEP:
+        tps, outs, eng = _measure(cfg, params, cycle, w, quick)
+        ok = outs == base_out
+        parity = parity and ok
+        rows.append({"spec_k": w,
+                     "kappa": round(eng.spec_kappa(), 3),
+                     "acceptance": round(eng.spec_acceptance_rate(), 3),
+                     "decode_tok_per_s": round(tps, 1),
+                     "speedup_vs_plain": round(tps / base_tps, 3),
+                     "token_parity": ok})
+    emit("speculative_engine", rows)
+    return rows, parity
+
+
+# ---------------------------------------------------------------------------
+# part 2: analytic fleet pricing
+# ---------------------------------------------------------------------------
+def run_analytic(lam: float = 1000.0, t_slo: float = 0.5):
+    from repro.core import planner as PL
+    from repro.core.profiles import A100_LLAMA70B
+    from repro.core.workload import get_workload
+
     rows = []
     for name in ("azure", "lmsys", "agent-heavy"):
         w = get_workload(name)
@@ -26,20 +166,22 @@ def run(lam: float = 1000.0, t_slo: float = 0.5):
         (lin_s, lout_s), (lin_l, lout_l), a_eff = PL._split(s, w.b_short, 1.5)
         base_total = None
         for kappa in (1.0, 2.0, 3.0):
-            import dataclasses
-            ovh = 1.0 + (DRAFT_OVERHEAD if kappa > 1 else 0.0)
-            prof = dataclasses.replace(
-                A100_LLAMA70B, w_ms=A100_LLAMA70B.w_ms * ovh,
-                h_ms_per_slot=A100_LLAMA70B.h_ms_per_slot * ovh)
+            prof = A100_LLAMA70B if kappa == 1.0 else \
+                A100_LLAMA70B.speculative(kappa, DRAFT_OVERHEAD)
             try:
-                short = PL.size_pool(a_eff * lam, lin_s, lout_s / kappa,
+                # size_pool reads prof.spec_kappa itself: decode
+                # occupancy shrinks by 1/kappa, t_iter inflates by the
+                # verify overhead (prefill is NOT inflated — drafting
+                # only rides decode iterations)
+                short = PL.size_pool(a_eff * lam, lin_s, lout_s,
                                      prof, w.b_short, t_slo)
                 long = PL.size_pool((1 - a_eff) * lam, lin_l,
-                                    lout_l / kappa, prof, 65536, t_slo)
+                                    lout_l, prof, 65536, t_slo)
             except PL.Infeasible:
-                # the 15% draft overhead pushes t_iter over the SLO at
-                # very high slot counts (lmsys @1536: 682 slots) — a
-                # real spec-decoding deployment constraint
+                # the verify overhead pushes t_iter over the SLO at
+                # very high slot counts — a real spec-decoding
+                # deployment constraint (pinned by
+                # tests/test_properties.py::test_analytic_infeasible_row)
                 rows.append({"workload": name, "kappa": kappa, "n_s": "-",
                              "n_l": "-", "total": "infeasible",
                              "saving_vs_k1_pct": "-"})
@@ -56,5 +198,29 @@ def run(lam: float = 1000.0, t_slo: float = 0.5):
     return rows
 
 
+def run(lam: float = 1000.0, t_slo: float = 0.5, quick: bool = False):
+    analytic = run_analytic(lam, t_slo)
+    engine_rows, parity = run_engine(quick)
+    head = next(r for r in engine_rows if r["spec_k"] == HEADLINE_W)
+    record = {
+        "bench": "speculative",
+        "quick": quick,
+        "headline": {
+            "spec_k": HEADLINE_W, "decode_k": DECODE_K,
+            "speedup_vs_plain": head["speedup_vs_plain"],
+            "kappa": head["kappa"], "acceptance": head["acceptance"],
+            "token_parity": parity,
+        },
+        "sweep": engine_rows,
+        "analytic": analytic,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"\nwrote {os.path.normpath(ROOT_JSON)} "
+          f"(headline {head['speedup_vs_plain']}x at spec_k={HEADLINE_W}, "
+          f"parity={parity})")
+    return record
+
+
 if __name__ == "__main__":
-    run()
+    run(quick="--quick" in sys.argv)

@@ -39,13 +39,26 @@ FAILS (exit 1) on a >25% regression.
     faked CPU devices whose collectives run in-process, so absolute
     and relative steps/s say nothing about real-accelerator scaling.
 
+``BENCH_speculative.json`` (optional 7th/8th args):
+
+  * ``headline.token_parity`` — deterministic and gated HARD: the
+    spec_k>1 engines must emit bitwise the spec_k=1 tokens on the
+    agent-loop stream. Any False fails, whatever the throughput.
+  * ``headline.kappa`` — deterministic on the cyclic workload
+    (acceptance is 1.0 by construction), compared within tolerance.
+  * ``headline.speedup_vs_plain`` — machine-relative (spec and plain
+    timed back-to-back) but with the same K=1-denominator load
+    sensitivity as the hotpath gate, so the committed baseline is
+    clamped to the >= 1.5x acceptance bar before the 25% tolerance.
+
 Improvements never fail; dense/paged output-token parity must hold.
 All records are printed in full on failure so the CI log is enough
 to diagnose without re-running.
 
 Usage: python benchmarks/check_regression.py COMMITTED.json FRESH.json
            [COMMITTED_hotpath.json FRESH_hotpath.json
-            [COMMITTED_sharded.json FRESH_sharded.json]]
+            [COMMITTED_sharded.json FRESH_sharded.json
+             [COMMITTED_speculative.json FRESH_speculative.json]]]
 """
 import json
 import sys
@@ -59,6 +72,8 @@ ENGINE_RATIOS = ("paged_steps_vs_dense", "packed_tok_s_vs_dense")
 # the gate tracks the acceptance floor, not one machine's best run
 HOTPATH_HEADLINE_CLAMP = 2.0     # the >= 2x @ K=8 acceptance bar
 HOTPATH_COMBO_CLAMP = 1.0        # never materially slower than K=1
+
+SPEC_HEADLINE_CLAMP = 1.5        # the >= 1.5x agent-workload bar
 
 
 def _slot_rows(record):
@@ -143,8 +158,39 @@ def compare_sharded(committed: dict, fresh: dict) -> list:
     return bad
 
 
+def compare_speculative(committed: dict, fresh: dict) -> list:
+    """Speculative-decoding record: hard token-parity flag,
+    deterministic kappa, clamped machine-relative speedup floor."""
+    bad = []
+    head_c = committed.get("headline", {})
+    head_f = fresh.get("headline", {})
+    if not head_f.get("token_parity", False):
+        bad.append("speculative: spec_k>1 output tokens diverged from the "
+                   "spec_k=1 engine (bitwise parity contract broke)")
+    old_k = head_c.get("kappa", 0.0)
+    new_k = head_f.get("kappa", 0.0)
+    if old_k > 0 and new_k < (1 - TOLERANCE) * old_k:
+        bad.append(f"speculative: headline kappa {new_k:g} < "
+                   f"{1 - TOLERANCE:.2f} * {old_k:g} (committed) — "
+                   "acceptance collapsed on the deterministic agent loop")
+    old_s = head_c.get("speedup_vs_plain", 0.0)
+    new_s = head_f.get("speedup_vs_plain", 0.0)
+    base = min(old_s, SPEC_HEADLINE_CLAMP)
+    if new_s < (1 - TOLERANCE) * base:
+        bad.append(f"speculative: headline speedup {new_s:g} < "
+                   f"{1 - TOLERANCE:.2f} * {base:g} "
+                   f"(committed {old_s:g} clamped to "
+                   f"{SPEC_HEADLINE_CLAMP:g})")
+    fresh_ws = {r["spec_k"] for r in fresh.get("sweep", [])}
+    for r in committed.get("sweep", []):
+        if r["spec_k"] not in fresh_ws:
+            bad.append(f"speculative: spec_k={r['spec_k']} sweep row "
+                       "missing from fresh record")
+    return bad
+
+
 def main(argv) -> int:
-    if len(argv) not in (3, 5, 7):
+    if len(argv) not in (3, 5, 7, 9):
         print(__doc__)
         return 2
     with open(argv[1]) as f:
@@ -160,13 +206,20 @@ def main(argv) -> int:
             fresh_hp = json.load(f)
         bad += compare_hotpath(committed_hp, fresh_hp)
         records.append(("engine_hotpath", committed_hp, fresh_hp))
-    if len(argv) == 7:
+    if len(argv) >= 7:
         with open(argv[5]) as f:
             committed_sh = json.load(f)
         with open(argv[6]) as f:
             fresh_sh = json.load(f)
         bad += compare_sharded(committed_sh, fresh_sh)
         records.append(("sharded_serving", committed_sh, fresh_sh))
+    if len(argv) == 9:
+        with open(argv[7]) as f:
+            committed_sp = json.load(f)
+        with open(argv[8]) as f:
+            fresh_sp = json.load(f)
+        bad += compare_speculative(committed_sp, fresh_sp)
+        records.append(("speculative", committed_sp, fresh_sp))
     if bad:
         print("BENCH REGRESSION GATE FAILED "
               f"(>{TOLERANCE:.0%} below the committed record):")

@@ -41,10 +41,12 @@ def main(quick: bool = False) -> None:
         bench_prefix_cache.run(quick=True)  # prefix cache, measured engine
         bench_engine_hotpath.run(quick=True)  # multi-step decode dispatch
         bench_sharded_serving.run(quick=True)  # tp-sharded engines
+        bench_speculative.run(quick=True)   # self-speculative decoding
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
               "CSVs in benchmarks/results/, BENCH_paged_kv.json, "
-              "BENCH_prefix_cache.json, BENCH_engine_hotpath.json and "
-              "BENCH_sharded_serving.json at root")
+              "BENCH_prefix_cache.json, BENCH_engine_hotpath.json, "
+              "BENCH_sharded_serving.json and BENCH_speculative.json "
+              "at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2

@@ -163,9 +163,20 @@ def size_pool(lam_p: float, l_in: np.ndarray, l_out: np.ndarray,
     approximation says ~0). A margin of k sigmas enforces
     c >= a + k*sqrt(a*(1+Cs^2)) slots for offered load a = lam*E[S]
     (Gaussian bound on Poisson occupancy). 0 = paper-faithful.
+
+    Speculative decoding (DESIGN.md §Speculative decoding): a profile
+    carrying measured ``spec_kappa`` > 1 emits kappa tokens per
+    (1 + spec_overhead)x verify iteration, so decode iterations per
+    request become L_out / kappa at the inflated t_iter — the fleet is
+    sized by EFFECTIVE tokens/s. kappa == 1 profiles are bit-identical
+    to the pre-speculation planner.
     """
     n_max = profile.n_max(c_max)
     t_iter = profile.t_iter(c_max)
+    kappa = max(1.0, profile.spec_kappa)
+    if kappa > 1.0:
+        t_iter = t_iter * (1.0 + profile.spec_overhead)
+        l_out = np.asarray(l_out, float) / kappa
     if lam_p <= 0 or len(l_in) == 0:
         m = ServiceMoments(0.0, 0.0, 0.0, 0.0)
         return PoolPlan(0, n_max, c_max, 0.0, math.inf, 0.0, 0.0, 0.0, m,

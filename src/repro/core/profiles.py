@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 
@@ -58,6 +59,18 @@ class HardwareProfile:
     # every replica. The default 1 reproduces the single-device
     # numbers bit-for-bit.
     devices_per_replica: int = 1
+    # Self-speculative decoding (DESIGN.md §Speculative decoding):
+    # measured mean tokens EMITTED per verify iteration (kappa >= 1;
+    # calibrate with InferenceEngine.spec_kappa() on the pool's
+    # traffic) and the relative per-iteration cost of the W-token
+    # verify step over a 1-token decode step. A kappa > 1 profile
+    # advances kappa tokens per (1 + spec_overhead)x iteration, so the
+    # planner sizes fleets by EFFECTIVE tokens/s: decode iterations
+    # per request become L_out / kappa while t_iter inflates by the
+    # overhead (core.planner.size_pool applies both). The defaults
+    # reproduce every pre-speculation number bit-for-bit.
+    spec_kappa: float = 1.0
+    spec_overhead: float = 0.0
 
     def n_max(self, c_max: int) -> int:
         """Concurrent slots per REPLICA (= per GPU at
@@ -144,7 +157,8 @@ class HardwareProfile:
                      block_size: int = DEFAULT_KV_BLOCK,
                      tail_margin_blocks: int =
                      DEFAULT_TAIL_MARGIN_BLOCKS,
-                     mean_prompt_tokens: float = 0.0) -> float:
+                     mean_prompt_tokens: float = 0.0,
+                     spec_kappa: Optional[float] = None) -> float:
         """Iteration latency (s) at full PAGED occupancy: same Eq. 3
         shape, but n is the paged slot count and — when H models the
         per-slot KV read — each slot streams only its actual ~E[L]
@@ -156,7 +170,16 @@ class HardwareProfile:
         (gather_pages materializes them into each row). So the H
         scaling deliberately ignores ``prefix_hit_rate`` — a cached
         pool iterates SLOWER per step (more slots, same per-slot read),
-        it just packs more of them per GPU."""
+        it just packs more of them per GPU.
+
+        ``spec_kappa`` (None = the profile's own ``spec_kappa`` field)
+        is the MEASURED speculative acceptance — kappa tokens emitted
+        per verify iteration (InferenceEngine.spec_kappa()) — turning
+        the returned value into the EFFECTIVE per-token decode latency
+        t_iter * (1 + spec_overhead) / kappa, which is what sizing
+        the fleet by effective tokens/s wants. kappa == 1 (the
+        default's default) returns the plain per-iteration latency
+        unchanged."""
         n = self.n_max_paged(mean_tokens, block_size, tail_margin_blocks,
                              mean_prompt_tokens)
         h = self.h_ms_per_slot / self.devices_per_replica
@@ -164,7 +187,11 @@ class HardwareProfile:
             h = h * (self._paged_slot_tokens(mean_tokens, block_size,
                                              tail_margin_blocks)
                      / self.c_ref)
-        return (self.w_ms + h * n) / 1000.0
+        t = (self.w_ms + h * n) / 1000.0
+        kappa = self.spec_kappa if spec_kappa is None else spec_kappa
+        if kappa > 1.0:
+            t = t * (1.0 + self.spec_overhead) / kappa
+        return t
 
     def annual_cost(self, n_gpus: int) -> float:
         """Annual $ for ``n_gpus`` REPLICAS — every device of every
@@ -183,6 +210,21 @@ class HardwareProfile:
             return self
         return dataclasses.replace(self, devices_per_replica=devices,
                                    name=f"{self.name}:tp{devices}")
+
+    def speculative(self, kappa: float,
+                    overhead: float = 0.15) -> "HardwareProfile":
+        """This profile with measured speculative acceptance ``kappa``
+        (tokens per verify iteration, InferenceEngine.spec_kappa())
+        and per-iteration verify overhead — the calibration hand-off
+        from a serving engine to fleet sizing."""
+        if kappa < 1.0:
+            raise ValueError(f"spec_kappa must be >= 1 (1 = no "
+                             f"speculation), got {kappa}")
+        if kappa == self.spec_kappa and overhead == self.spec_overhead:
+            return self
+        return dataclasses.replace(self, spec_kappa=kappa,
+                                   spec_overhead=overhead,
+                                   name=f"{self.name}:spec{kappa:g}")
 
 
 # Paper-faithful profile: Llama-3-70B / A100-80GB (§7.1).

@@ -63,6 +63,7 @@ def serve_fleet(args) -> None:
                                 paged=args.paged or args.prefix_cache,
                                 prefix_cache=args.prefix_cache,
                                 decode_k=args.decode_k,
+                                spec_k=args.spec_k,
                                 mesh=mesh, tp_degree=args.tp)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
@@ -125,6 +126,15 @@ def serve_fleet(args) -> None:
     print(f"engine hot path: decode_k={args.decode_k} "
           f"{disp} dispatches / {dtok} decode tokens "
           f"({disp / max(1, dtok):.3f} dispatches/token)")
+    if args.spec_k > 1:
+        for name, eng in rt.engines.items():
+            st = eng.spec_stats
+            if st["verify_windows"]:
+                print(f"  {name}: spec_k={args.spec_k} "
+                      f"kappa={eng.spec_kappa():.2f} "
+                      f"acceptance={eng.spec_acceptance_rate():.2f} "
+                      f"({st['accepted_tokens']}/{st['proposed_tokens']} "
+                      f"draft tokens over {st['verify_windows']} windows)")
     if args.prefix_cache:
         for name, eng in rt.engines.items():
             st = eng.prefix_stats
@@ -161,6 +171,13 @@ def main():
                          "host dispatch (on-device lax.scan micro-loop; "
                          "same output tokens, ~K-fold fewer host "
                          "round-trips in decode-only steady state)")
+    ap.add_argument("--spec-k", type=int, default=1, metavar="W",
+                    help="--fleet engines self-speculate with verify "
+                         "windows of W tokens (n-gram prompt-lookup "
+                         "drafts checked by the model's own argmax in "
+                         "the decode scan; bitwise-same output tokens, "
+                         ">1 of them per iteration on repetitive "
+                         "traffic)")
     ap.add_argument("--tp", type=int, default=1, metavar="D",
                     help="--fleet engines run tensor-parallel over D "
                          "devices each (submeshes of --mesh or of a "

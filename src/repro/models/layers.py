@@ -528,6 +528,18 @@ def write_chunk_kv(kv: Params, k, v, start, lengths) -> Params:
     Rows whose chunk is shorter than L keep the old cache contents at
     the padded positions, so a single padded-bucket trace serves every
     chunk length without corrupting neighbouring cache entries.
+
+    Overwrite contract (speculative decoding relies on it): a write at
+    position p REPLACES that cache entry completely — nothing is
+    accumulated or ring-buffered at the full-attention offsets this
+    function addresses. Entries at positions >= a row's current length
+    are therefore dead weight: the causal mask (j <= position) hides
+    them from every query until a later write at the same position
+    replaces them. That is what makes a REJECTED draft token's KV entry
+    harmless — the retried decode at that position overwrites it before
+    any query can attend it. Windowed ring-buffer caches violate this
+    (their modular offsets alias live history), which is why the engine
+    refuses spec_k > 1 for attention_window configs.
     """
     new_kv = dict(kv)
     if "k_scale" in kv:

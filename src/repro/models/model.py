@@ -498,7 +498,8 @@ def paged_decode_step(params: Params, cfg: ModelConfig, token,
 
 def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens,
                         cache: Params, block_tables, start_pos, lengths,
-                        parallel=None) -> Tuple[jnp.ndarray, Params]:
+                        parallel=None, all_logits=False
+                        ) -> Tuple[jnp.ndarray, Params]:
     """Paged analog of the fused sequence-level chunk prefill
     (:func:`_prefill_chunk_fused`): write the chunk's K/V through the
     block table (per-block dynamic scatter), then attend chunk queries
@@ -548,10 +549,16 @@ def paged_prefill_chunk(params: Params, cfg: ModelConfig, tokens,
 
     x, kv = _scan(body, x, (params["layers"], cache["kv"]))
     cache = dict(cache, kv=kv)
+    head = params.get("lm_head")
+    if all_logits:
+        # speculative verify path (paged_verify_step): logits at every
+        # window position, (B, L, V)
+        x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        return (x @ head if head is not None
+                else x @ params["embed"].T), cache
     last = jnp.clip(lengths - 1, 0, l - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
-    head = params.get("lm_head")
     logits = x @ head if head is not None else x @ params["embed"].T
     return logits[:, 0], cache
 
@@ -948,11 +955,72 @@ def prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache: Params,
     return logits, cache
 
 
+def verify_step(params: Params, cfg: ModelConfig, tokens, cache: Params,
+                start_pos, lengths, parallel=None,
+                window: Optional[int] = None,
+                decode_impl: str = "xla") -> Tuple[jnp.ndarray, Params]:
+    """Speculative multi-token verify (DESIGN.md §Speculative decoding):
+    advance every row by its [last_tok, draft_1..draft_w] window in ONE
+    call and return the logits at EVERY window position, so the caller
+    can accept the longest draft prefix matching the model's own greedy
+    argmax.
+
+    Exactly the masked :func:`prefill_chunk` machinery — same fused
+    sequence-level chunk for dense/MoE full attention, same masked
+    per-token decode scan for the other families, same ``lengths == 0
+    => bitwise no-op`` idle-row invariant — except the LM head runs
+    over all L positions instead of gathering the last one. Rejected
+    positions' KV entries are dead weight the next write at that
+    position fully overwrites (layers.write_chunk_kv contract), so a
+    failed draft costs nothing but the wasted FLOPs.
+
+    tokens: (B, L); start_pos/lengths: (B,). Returns
+    (logits (B, L, V), cache); logits rows beyond ``lengths`` and idle
+    rows are garbage the caller must mask.
+    """
+    b, l = tokens.shape
+    w = cfg.attention_window if window is None else window
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if cfg.family in (DENSE, MOE) and cfg.mla is None and not w:
+        return _prefill_chunk_fused(params, cfg, tokens, cache, start_pos,
+                                    lengths, parallel, all_logits=True)
+
+    def body(carry, t):
+        cache, buf = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, 1)
+        act = t < lengths
+        lg, cache = decode_step(params, cfg, tok, cache, start_pos + t,
+                                parallel=parallel, window=window,
+                                decode_impl=decode_impl, active=act)
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, lg[:, None].astype(buf.dtype), t, axis=1)
+        return (cache, buf), None
+
+    buf0 = jnp.zeros((b, l, cfg.vocab_size), jnp.dtype(cfg.dtype))
+    (cache, buf), _ = jax.lax.scan(body, (cache, buf0), jnp.arange(l))
+    return buf, cache
+
+
+def paged_verify_step(params: Params, cfg: ModelConfig, tokens,
+                      cache: Params, block_tables, start_pos, lengths,
+                      parallel=None) -> Tuple[jnp.ndarray, Params]:
+    """Paged analog of :func:`verify_step`: the
+    :func:`paged_prefill_chunk` pass with the LM head over all window
+    positions. Returns (logits (B, L, V), cache)."""
+    return paged_prefill_chunk(params, cfg, tokens, cache, block_tables,
+                               start_pos, lengths, parallel=parallel,
+                               all_logits=True)
+
+
 def _prefill_chunk_fused(params, cfg, tokens, cache, start_pos, lengths,
-                         parallel):
+                         parallel, all_logits=False):
     """Sequence-level chunk prefill for contiguous-cache dense/MoE
     attention: write the chunk's K/V into the batched cache in place,
-    then attend chunk queries over (cache prefix + chunk) causally."""
+    then attend chunk queries over (cache prefix + chunk) causally.
+    ``all_logits=True`` (the speculative verify path) returns the LM
+    head over every chunk position, (B, L, V), instead of the per-row
+    last valid position."""
     b, l = tokens.shape
     x = params["embed"][tokens]                          # (B, L, D)
     positions = start_pos[:, None] + jnp.arange(l)[None, :]
@@ -990,12 +1058,18 @@ def _prefill_chunk_fused(params, cfg, tokens, cache, start_pos, lengths,
 
     x, kv = _scan(body, x, (params["layers"], cache["kv"]))
     cache = dict(cache, kv=kv)
+    head = params.get("lm_head")
+    if all_logits:
+        # speculative verify: the caller needs the greedy continuation
+        # at EVERY window position to score its draft tokens
+        x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        return (x @ head if head is not None
+                else x @ params["embed"].T), cache
     # gather each row's final valid hidden state BEFORE the LM head so
     # the (vocab) projection runs over 1 position per row, not L
     last = jnp.clip(lengths - 1, 0, l - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
-    head = params.get("lm_head")
     logits = x @ head if head is not None else x @ params["embed"].T
     return logits[:, 0], cache
 

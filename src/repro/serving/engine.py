@@ -107,6 +107,8 @@ from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.distributed import sharding as SH
 from repro.distributed.context import ParallelContext, make_context
 from repro.models import model as M
+from repro.serving.draft import DEFAULT_NGRAM as DEFAULT_SPEC_NGRAM
+from repro.serving.draft import propose_draft
 
 
 def prefill_buckets(c_chunk: int, min_bucket: int = 8) -> Tuple[int, ...]:
@@ -149,6 +151,7 @@ class InferenceEngine:
                  block_size: int = DEFAULT_KV_BLOCK,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = False, decode_k: int = 1,
+                 spec_k: int = 1, spec_ngram: int = DEFAULT_SPEC_NGRAM,
                  mesh=None, parallel: Optional[ParallelContext] = None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
@@ -157,6 +160,15 @@ class InferenceEngine:
         if prefix_cache and not paged:
             raise ValueError("prefix_cache=True needs the paged KV cache "
                              "(block granularity is what gets shared)")
+        if spec_k > 1 and cfg.attention_window:
+            # a rejected draft's KV write at ring slot (p+i) % window
+            # would clobber LIVE in-window history the retried position
+            # still attends (layers.write_chunk_kv overwrite contract
+            # only holds for full-attention offsets)
+            raise NotImplementedError(
+                "speculative decoding needs full-attention KV offsets; "
+                "windowed ring-buffer caches alias live history under "
+                "rejected drafts")
         # -- mesh / tensor parallel (DESIGN.md §Sharded serving) -----------
         self.mesh = mesh
         self.parallel = (parallel or make_context(mesh)) \
@@ -271,6 +283,21 @@ class InferenceEngine:
         # dispatch advances decode_k iterations, so the two clocks
         # diverge — queue/TTFT accounting stays in iterations.
         self.decode_k = max(1, int(decode_k))
+        # -- self-speculative decoding (DESIGN.md §Speculative decoding)
+        # spec_k = verify-window width W: 1 carried token + up to W-1
+        # host-proposed draft tokens per decode micro-iteration. The
+        # host proposes ONE draft continuation of up to
+        # decode_k * (spec_k - 1) tokens per slot per dispatch; the
+        # scan walks it with a per-row cursor, so drafting composes
+        # with the K-step scan without any mid-scan host sync.
+        self.spec_k = max(1, int(spec_k))
+        self.spec_ngram = max(1, int(spec_ngram))
+        self.spec_stats = {
+            "drafted_tokens": 0,     # host proposer output, pre-clip
+            "proposed_tokens": 0,    # draft tokens fed to verify windows
+            "accepted_tokens": 0,    # fed drafts the model confirmed
+            "verify_windows": 0,     # live verify micro-iterations
+        }
         self.dispatches = 0            # jitted calls, total
         self.decode_dispatches = 0     # decode-only scan/step calls
         self.decode_tokens_emitted = 0  # tokens emitted, ANY dispatch kind
@@ -300,11 +327,20 @@ class InferenceEngine:
                                          donate_argnums=1)
             # decode scan: cache + carried device state donated; the
             # block table (arg 3) is the cached _bt_device and must
-            # survive the call
-            self._decode_scan = jax.jit(
-                partial(self._paged_decode_scan_fn, decode_impl,
-                        self.decode_k),
-                donate_argnums=(1, 2, 4, 5, 6))
+            # survive the call. spec_k > 1 swaps the per-token scan
+            # body for the speculative verify body — same carry, same
+            # donation (the draft table args are fresh per dispatch
+            # and not donated).
+            if self.spec_k > 1:
+                self._decode_scan = jax.jit(
+                    partial(self._paged_spec_scan_fn, decode_impl,
+                            self.decode_k, self.spec_k),
+                    donate_argnums=(1, 2, 4, 5, 6))
+            else:
+                self._decode_scan = jax.jit(
+                    partial(self._paged_decode_scan_fn, decode_impl,
+                            self.decode_k),
+                    donate_argnums=(1, 2, 4, 5, 6))
             self._mixed = jax.jit(partial(self._paged_mixed_fn,
                                           decode_impl), donate_argnums=1)
         else:
@@ -315,9 +351,16 @@ class InferenceEngine:
             self._prefill_step = jax.jit(partial(self._prefill_fn,
                                                  decode_impl),
                                          donate_argnums=1)
-            self._decode_scan = jax.jit(
-                partial(self._decode_scan_fn, decode_impl, self.decode_k),
-                donate_argnums=(1, 2, 3, 4, 5))
+            if self.spec_k > 1:
+                self._decode_scan = jax.jit(
+                    partial(self._spec_scan_fn, decode_impl, self.decode_k,
+                            self.spec_k),
+                    donate_argnums=(1, 2, 3, 4, 5))
+            else:
+                self._decode_scan = jax.jit(
+                    partial(self._decode_scan_fn, decode_impl,
+                            self.decode_k),
+                    donate_argnums=(1, 2, 3, 4, 5))
             self._mixed = jax.jit(partial(self._mixed_fn, decode_impl),
                                   donate_argnums=1)
 
@@ -508,7 +551,14 @@ class InferenceEngine:
             for s, chunk in chunks.items():
                 self._ensure_blocks(s, int(self.slot_pos[s]) + len(chunk))
             if decode_mask.any():
-                k = self.decode_k if not chunks else 1
+                # max tokens one decode-only dispatch can emit per row:
+                # decode_k micro-iterations x up to spec_k tokens each
+                # (the verify body clips each window to budget, so the
+                # per-slot advance never exceeds its admission-time
+                # worst-case reservation). Pre-provisioning here is
+                # what keeps the scan from ever re-entering the host
+                # allocator mid-dispatch.
+                k = self.decode_k * self.spec_k if not chunks else 1
                 for s in np.where(decode_mask)[0]:
                     req = self.slot_req[s]
                     left = req.max_new_tokens - len(self.slot_out[int(s)])
@@ -521,7 +571,9 @@ class InferenceEngine:
             self._occ_slot_iters += occupied
             self._run_prefill_chunks(chunks)
         elif decode_mask.any():
-            if self.decode_k > 1:
+            if self.spec_k > 1:
+                self._run_spec_scan(decode_mask)
+            elif self.decode_k > 1:
                 self._run_decode_scan(decode_mask)
             else:
                 self._occ_slot_iters += occupied
@@ -920,6 +972,105 @@ class InferenceEngine:
             body, (cache, tok, pos, active, budget), None, length=k)
         return carry, emitted.T
 
+    # -- speculative verify scan (DESIGN.md §Speculative decoding) ---------
+    def _spec_body(self, decode_impl, w_max, params, block_tables, drafts,
+                   dlen, carry):
+        """One speculative verify micro-iteration inside the K-step
+        scan: feed [last_tok, next w draft tokens] through the masked
+        multi-token verify step, accept the longest draft prefix that
+        matches the model's own greedy argmax, and emit it plus the
+        bonus token — a per-row DYNAMIC advance of 1..w_max tokens
+        through the same carry the plain scan uses.
+
+        The draft table is walked by a per-row cursor: a row whose
+        window fully accepts continues from the next draft tokens; a
+        row whose draft dies burns the rest of its drafts (cursor ->
+        dlen) and degenerates to plain 1-token decode for the remaining
+        micro-iterations — no separate code path, just lengths == 1.
+        Inactive rows feed lengths == 0 and stay provable bitwise
+        no-ops, exactly like finished slots in the plain scan."""
+        cache, tok, pos, active, budget, cur = carry
+        w_d = w_max - 1                       # draft tokens per window
+        idx = jnp.clip(cur[:, None] + jnp.arange(w_d)[None, :], 0,
+                       drafts.shape[1] - 1)
+        dwin = jnp.take_along_axis(drafts, idx, axis=1)      # (B, W-1)
+        # feedable draft count: leftover drafts, clipped so the window
+        # (drafts + bonus token) can never outrun the row's remaining
+        # budget or the context — the same termination quantities the
+        # plain scan checks AFTER emitting, checked BEFORE here
+        w = jnp.minimum(dlen - cur,
+                        jnp.minimum(budget - 1, self.c_max - 1 - pos))
+        w = jnp.where(active, jnp.clip(w, 0, w_d), 0)
+        fed = jnp.concatenate([tok[:, None], dwin], axis=1)  # (B, W)
+        lengths = jnp.where(active, 1 + w, 0)
+        if block_tables is None:
+            logits, cache = M.verify_step(
+                params, self.cfg, fed, cache, pos, lengths,
+                decode_impl=decode_impl)
+        else:
+            logits, cache = M.paged_verify_step(
+                params, self.cfg, fed, cache, block_tables, pos, lengths)
+        cache = self._constrain_cache(cache)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (B, W)
+        # draft i (fed position i+1) is accepted iff it equals the
+        # model's continuation at the previous position; j = longest
+        # accepted prefix. Because accepted drafts EQUAL g, emitting
+        # g[0..j] is bitwise the sequence plain decode would produce.
+        match = (dwin == g[:, :w_d]) \
+            & (jnp.arange(w_d)[None, :] < w[:, None])
+        j = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+        emit = (jnp.arange(w_max)[None, :] <= j[:, None]) & active[:, None]
+        if self.eos_id is not None:
+            # truncate the window at the first emitted EOS — the host
+            # releases the slot there, so the device must not advance
+            # past it either (host/device lockstep)
+            is_eos = (g == self.eos_id).astype(jnp.int32)
+            emit &= (jnp.cumsum(is_eos, axis=1) - is_eos) == 0
+        emitted = jnp.where(emit, g, -1)
+        e = emit.sum(axis=1).astype(jnp.int32)   # >= 1 for active rows
+        last = jnp.take_along_axis(
+            g, jnp.clip(e - 1, 0, w_max - 1)[:, None], axis=1)[:, 0]
+        tok = jnp.where(active & (e > 0), last, tok)
+        pos = pos + e
+        budget = budget - e
+        # cursor: a fully-accepted window emits its bonus token too, and
+        # the host drafted a prediction for that position (d[cur+w]) —
+        # if the bonus confirms it, the continuation is still alive and
+        # the next window resumes AFTER it (cur+w+1); any divergence
+        # (partial accept, or bonus != predicted) kills the rest of the
+        # row's drafts, because they all extend the dead continuation
+        d_next = jnp.take_along_axis(
+            drafts, jnp.clip(cur + w, 0, drafts.shape[1] - 1)[:, None],
+            axis=1)[:, 0]
+        chain = (j >= w) & (cur + w < dlen) & (d_next == last)
+        cur = jnp.where(chain, cur + w + 1, dlen)
+        done = (budget <= 0) | (pos >= self.c_max)
+        if self.eos_id is not None:
+            done = done | (emit & (g == self.eos_id)).any(axis=1)
+        active = active & ~done
+        return (cache, tok, pos, active, budget, cur), (emitted, w)
+
+    def _spec_scan_fn(self, decode_impl, k, w_max, params, cache, tok,
+                      pos, active, budget, drafts, dlen):
+        def body(carry, _):
+            return self._spec_body(decode_impl, w_max, params, None,
+                                   drafts, dlen, carry)
+        cur = jnp.zeros_like(dlen)
+        carry, outs = jax.lax.scan(
+            body, (cache, tok, pos, active, budget, cur), None, length=k)
+        return carry, outs          # ((K, B, W) emitted, (K, B) fed)
+
+    def _paged_spec_scan_fn(self, decode_impl, k, w_max, params, cache,
+                            tok, block_tables, pos, active, budget,
+                            drafts, dlen):
+        def body(carry, _):
+            return self._spec_body(decode_impl, w_max, params,
+                                   block_tables, drafts, dlen, carry)
+        cur = jnp.zeros_like(dlen)
+        carry, outs = jax.lax.scan(
+            body, (cache, tok, pos, active, budget, cur), None, length=k)
+        return carry, outs
+
     def _mixed_fn(self, decode_impl, params, cache, tokens, pos, lengths,
                   decode_toks, active):
         logits, cache = M.mixed_step(params, self.cfg, tokens, cache, pos,
@@ -1041,6 +1192,108 @@ class InferenceEngine:
             # a row that stayed live emitted every micro-iteration, so
             # the per-token occupancy increments above already credit
             # it with all k iterations
+
+    def _run_spec_scan(self, mask: np.ndarray) -> None:
+        """One dispatch, ``decode_k`` speculative verify iterations
+        (DESIGN.md §Speculative decoding): the host proposes ONE
+        n-gram draft continuation per slot, the jitted scan verifies
+        it window by window, and the single sync pulls the
+        (K, n_max, spec_k) emitted-token tensor. The host replays
+        per WINDOW (the flat emitted stream is -1-padded per window,
+        not prefix-terminated like the plain scan's), applying the
+        same completion rule so the device and host mirrors stay in
+        exact lockstep."""
+        k, w_max = self.decode_k, self.spec_k
+        # ceiling consumption per dispatch: every window can feed
+        # w_max-1 drafts AND chain its bonus through one more (the
+        # cursor's cur+w+1 advance), so k windows can walk k*w_max - 1
+        # drafts when the continuation never diverges
+        m_len = k * w_max - 1
+        drafts = np.zeros((self.n_max, m_len), np.int32)
+        dlen = np.zeros(self.n_max, np.int32)
+        for s in np.where(mask)[0]:
+            s = int(s)
+            req = self.slot_req[s]
+            # a draft token is only useful if the budget/context also
+            # admits its bonus token — clip at the source so proposals
+            # never exceed the remaining budget (property-test pinned)
+            cap = min(m_len,
+                      req.max_new_tokens - len(self.slot_out[s]) - 1,
+                      self.c_max - 1 - int(self.slot_pos[s]))
+            if cap <= 0:
+                continue
+            d = propose_draft(list(req.tokens) + self.slot_out[s], cap,
+                              self.spec_ngram)
+            if d:
+                drafts[s, :len(d)] = d
+                dlen[s] = len(d)
+                self.spec_stats["drafted_tokens"] += len(d)
+        tok, pos, active, budget = self._device_decode_state(mask)
+        d_dev = self._upload(drafts)
+        n_dev = self._upload(dlen)
+        if self.paged:
+            carry, (emitted, fed) = self._decode_scan(
+                self.params, self.cache, tok, self._block_table_device(),
+                pos, active, budget, d_dev, n_dev)
+        else:
+            carry, (emitted, fed) = self._decode_scan(
+                self.params, self.cache, tok, pos, active, budget,
+                d_dev, n_dev)
+        self.cache = carry[0]
+        # the carry's draft cursor is per-dispatch scratch; only the
+        # (tok, pos, active, budget) slot state persists on device
+        self._dev_state = carry[1:5]
+        self.dispatches += 1
+        self.decode_dispatches += 1
+        emitted = np.asarray(emitted)        # (K, n_max, W) — the sync
+        fed = np.asarray(fed)                # (K, n_max) drafts fed
+        self.iteration += k - 1              # step() already added 1
+        for s in np.where(mask)[0]:
+            s = int(s)
+            done = False
+            for m in range(k):
+                e = 0
+                for i in range(w_max):
+                    t = int(emitted[m, s, i])
+                    if t < 0:
+                        break
+                    e += 1
+                    self._decode_only_tokens += 1
+                    done = self._append_token(s, t)
+                    if done:
+                        break
+                if e:
+                    # one live verify window == one occupied model
+                    # iteration, however many tokens it accepted —
+                    # utilization stays comparable across kappa
+                    self._occ_slot_iters += 1
+                    self.spec_stats["proposed_tokens"] += int(fed[m, s])
+                    self.spec_stats["accepted_tokens"] += e - 1
+                    self.spec_stats["verify_windows"] += 1
+                if done:
+                    break
+            if done:
+                self._finish_slot(s)
+
+    def spec_acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens over all verify windows
+        (0.0 before any window ran). ``proposed`` counts what was FED
+        to the verifier — drafts clipped away by budget/context never
+        reach a window and are not charged."""
+        if self.spec_stats["proposed_tokens"] == 0:
+            return 0.0
+        return (self.spec_stats["accepted_tokens"]
+                / self.spec_stats["proposed_tokens"])
+
+    def spec_kappa(self) -> float:
+        """Measured mean tokens emitted per verify iteration (>= 1.0;
+        1.0 = speculation never accepted anything). This is the kappa
+        ``HardwareProfile.spec_kappa`` wants for effective-tokens/s
+        fleet sizing."""
+        w = self.spec_stats["verify_windows"]
+        if w == 0:
+            return 1.0
+        return (self.spec_stats["accepted_tokens"] + w) / w
 
     def _run_mixed(self, chunks: Dict[int, List[int]],
                    mask: np.ndarray) -> None:

@@ -68,7 +68,7 @@ class FleetRuntime:
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
                  prefix_cache: bool = False, decode_k: int = 1,
-                 mesh=None, tp_degree: int = 1):
+                 spec_k: int = 1, mesh=None, tp_degree: int = 1):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -109,12 +109,16 @@ class FleetRuntime:
         # decode_k>1 runs each engine's decode-only dispatches as a
         # K-step on-device scan (DESIGN.md §Engine hot path) — same
         # output tokens, ~K-fold fewer host round-trips per token.
+        # spec_k>1 adds self-speculative drafting inside that scan
+        # (DESIGN.md §Speculative decoding) — still the same output
+        # tokens (greedy-argmax-exact verify), >1 of them per model
+        # iteration when the traffic repeats itself.
         self.engines: Dict[str, InferenceEngine] = {
             names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
                                       c_chunk, paged=paged,
                                       block_size=kv_block_size,
                                       prefix_cache=prefix_cache,
-                                      decode_k=decode_k,
+                                      decode_k=decode_k, spec_k=spec_k,
                                       mesh=self._submeshes[i])
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
@@ -132,7 +136,7 @@ class FleetRuntime:
                   paged: bool = False,
                   kv_block_size: int = DEFAULT_KV_BLOCK,
                   prefix_cache: bool = False,
-                  decode_k: int = 1,
+                  decode_k: int = 1, spec_k: int = 1,
                   mesh=None, tp_degree: int = 1) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
@@ -156,7 +160,8 @@ class FleetRuntime:
         return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
                    c_maxes, c_chunk, paged=paged,
                    kv_block_size=kv_block_size, prefix_cache=prefix_cache,
-                   decode_k=decode_k, mesh=mesh, tp_degree=tp_degree)
+                   decode_k=decode_k, spec_k=spec_k, mesh=mesh,
+                   tp_degree=tp_degree)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -215,10 +220,10 @@ class TwoPoolRuntime(FleetRuntime):
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
                  prefix_cache: bool = False, decode_k: int = 1,
-                 mesh=None, tp_degree: int = 1):
+                 spec_k: int = 1, mesh=None, tp_degree: int = 1):
         super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
                          c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
                          paged=paged, kv_block_size=kv_block_size,
                          prefix_cache=prefix_cache, decode_k=decode_k,
-                         mesh=mesh, tp_degree=tp_degree)
+                         spec_k=spec_k, mesh=mesh, tp_degree=tp_degree)

@@ -1,0 +1,169 @@
+"""Property-based invariants (hypothesis) plus deterministic anchors.
+
+The hypothesis tests degrade to skips on the offline seed image (the
+shim in conftest.py); each property therefore also has a fast
+deterministic anchor test below it that runs everywhere, so CI always
+exercises the invariant at least once.
+
+Pinned properties:
+
+* planner — boundary vectors come out strictly sorted, and the K=2
+  generalized planner reproduces ``fleetopt_plan``'s best two-pool
+  plan bit-for-bit, under randomized workload CDFs;
+* queueing — Kimura's P99 wait is monotone non-increasing in the
+  server count at fixed load;
+* draft proposer — a proposal is always a contiguous substring of the
+  history and never exceeds the requested budget.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import planner as PL
+from repro.core.queueing import kimura_w99
+from repro.core.workload import PiecewiseCDF, get_workload
+from repro.serving.draft import propose_draft
+
+B_CANDS = (512, 1024, 2048, 4096)
+GAMMAS = (1.0, 1.5)
+
+
+def _random_workload(xs_frac, fs_frac):
+    """A valid log-linear CDF from hypothesis-drawn interior anchors,
+    grafted onto the azure workload's output-length model."""
+    xs = [64.0]
+    for f in sorted(set(xs_frac)):
+        xs.append(64.0 + f * (32768.0 - 64.0))
+    xs.append(65536.0)
+    fs = [0.0] + sorted(fs_frac)[: len(xs) - 2] + [1.0]
+    while len(fs) < len(xs):
+        fs.insert(-1, fs[-2])
+    cdf = PiecewiseCDF(tuple(zip(xs, fs)))
+    return dataclasses.replace(get_workload("azure"), name="prop",
+                               cdf=cdf)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(xs_frac=st.lists(st.floats(0.01, 0.99), min_size=2, max_size=3),
+       fs_frac=st.lists(st.floats(0.02, 0.98), min_size=3, max_size=3))
+def test_planner_boundaries_sorted(xs_frac, fs_frac):
+    """Whatever the CDF, a K=3 plan's boundary vector is strictly
+    increasing and drawn from the candidate set."""
+    w = _random_workload(xs_frac, fs_frac)
+    try:
+        plan = PL.plan_k_pool(w, lam=200.0, t_slo=0.5, k=3,
+                              b_candidates=B_CANDS, gamma_grid=GAMMAS)
+    except PL.Infeasible:
+        return
+    bs = plan.boundaries
+    assert list(bs) == sorted(bs)
+    assert len(set(bs)) == len(bs)
+    assert all(b in B_CANDS for b in bs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(xs_frac=st.lists(st.floats(0.01, 0.99), min_size=2, max_size=3),
+       fs_frac=st.lists(st.floats(0.02, 0.98), min_size=3, max_size=3))
+def test_planner_k2_reproduces_fleetopt(xs_frac, fs_frac):
+    """The generalized K=2 search must stay bit-identical to the
+    paper's Algorithm 1 wrapper under random CDFs (the docstring
+    contract of plan_k_pool)."""
+    w = _random_workload(xs_frac, fs_frac)
+    try:
+        best, _ = PL.fleetopt_plan(w, lam=200.0, t_slo=0.5,
+                                   b_candidates=B_CANDS,
+                                   gamma_grid=GAMMAS)
+        plan = PL.plan_k_pool(w, lam=200.0, t_slo=0.5, k=2,
+                              b_candidates=B_CANDS, gamma_grid=GAMMAS)
+    except PL.Infeasible:
+        return
+    assert plan.boundaries == best.boundaries
+    assert plan.gammas == best.gammas
+    assert plan.annual_cost == best.annual_cost
+    assert plan.total_gpus == best.total_gpus
+
+
+def test_planner_k2_reproduces_fleetopt_anchor():
+    """Deterministic anchor for the bit-identity claim (azure)."""
+    w = get_workload("azure")
+    best, _ = PL.fleetopt_plan(w, lam=200.0, t_slo=0.5,
+                               b_candidates=B_CANDS, gamma_grid=GAMMAS)
+    plan = PL.plan_k_pool(w, lam=200.0, t_slo=0.5, k=2,
+                          b_candidates=B_CANDS, gamma_grid=GAMMAS)
+    assert (plan.boundaries, plan.gammas, plan.annual_cost) == \
+        (best.boundaries, best.gammas, best.annual_cost)
+    assert list(plan.boundaries) == sorted(plan.boundaries)
+
+
+# ---------------------------------------------------------------------------
+# queueing
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(mu=st.floats(0.2, 5.0), lam=st.floats(0.5, 80.0),
+       cs2=st.floats(0.05, 4.0))
+def test_w99_monotone_in_servers(mu, lam, cs2):
+    """Adding servers never increases the P99 wait (the planner's
+    smallest-feasible-c search relies on this)."""
+    c0 = int(np.ceil(lam / mu)) + 1
+    ws = [kimura_w99(c, mu, lam, cs2) for c in range(c0, c0 + 10)]
+    assert all(a >= b - 1e-12 for a, b in zip(ws, ws[1:]))
+    assert all(w >= 0.0 for w in ws)
+
+
+def test_w99_monotone_anchor():
+    ws = [kimura_w99(c, 1.3, 17.0, 1.7) for c in range(14, 40)]
+    assert all(a >= b - 1e-12 for a, b in zip(ws, ws[1:]))
+    assert ws[-1] == 0.0    # many-server regime floors at zero
+
+
+# ---------------------------------------------------------------------------
+# draft proposer
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(h=st.lists(st.integers(0, 7), max_size=48),
+       m=st.integers(-2, 10))
+def test_proposal_is_substring_within_budget(h, m):
+    """Every proposal is a contiguous substring of the history and
+    never exceeds the requested budget — the invariants the engine's
+    budget clip and the verify window's take_along_axis gather assume."""
+    d = propose_draft(h, m)
+    assert len(d) <= max(0, m)
+    if d:
+        n = len(d)
+        assert any(h[i:i + n] == d for i in range(len(h) - n + 1)), \
+            f"proposal {d} not a substring of {h}"
+
+
+def test_proposal_substring_anchor():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        h = [int(t) for t in rng.integers(0, 6, int(rng.integers(0, 40)))]
+        m = int(rng.integers(0, 9))
+        d = propose_draft(h, m)
+        assert len(d) <= m
+        if d:
+            n = len(d)
+            assert any(h[i:i + n] == d for i in range(len(h) - n + 1))
+
+
+# ---------------------------------------------------------------------------
+# bench plumbing: the Infeasible row path must stay alive
+# ---------------------------------------------------------------------------
+def test_analytic_infeasible_row():
+    """bench_speculative's analytic table renders Infeasible pools as
+    explicit rows instead of dropping them silently — pinned at an
+    arrival rate no fleet can serve."""
+    from benchmarks.bench_speculative import run_analytic
+    rows = run_analytic(lam=1e9)
+    assert rows, "analytic sweep emitted no rows"
+    infeasible = [r for r in rows if r["total"] == "infeasible"]
+    assert infeasible, "no Infeasible rows at lam=1e9"
+    for r in infeasible:
+        assert r["n_s"] == r["n_l"] == "-"
+        assert r["saving_vs_k1_pct"] == "-"
