@@ -4,24 +4,28 @@ The paper validates under Poisson arrivals only. Real gateway traffic
 is bursty; this bench drives the SAME FleetOpt plan with two-state MMPP
 arrivals (equal mean rate) and reports P99 TTFT and utilization —
 showing where the tail_margin guard (planner option, §Findings) earns
-its keep on small pools."""
-from benchmarks.common import emit
+its keep on small pools.
+
+The MMPP generator itself lives in benchmarks/common.py (promoted from
+here; bench_overload drives the serving engine with the same one)."""
+from benchmarks.common import emit, mmpp_arrivals  # noqa: F401
 from repro.core.planner import fleetopt_plan
 from repro.core.profiles import A100_LLAMA70B
 from repro.core.workload import get_workload
 from repro.sim.des import FleetDES
 
 
-def run(lam: float = 1000.0):
+def run(lam: float = 1000.0, quick: bool = False):
     rows = []
-    for name in ("azure", "lmsys"):
+    for name in (("azure",) if quick else ("azure", "lmsys")):
         w = get_workload(name)
         for margin in (0.0, 3.0):
             plan, _ = fleetopt_plan(w, lam, 0.5, A100_LLAMA70B,
                                     tail_margin=margin)
             for proc in ("poisson", "mmpp"):
                 des = FleetDES(plan, A100_LLAMA70B, w)
-                stats = des.run(lam=lam, seed=7, arrival_process=proc)
+                stats = des.run(n_requests=8_000 if quick else 30_000,
+                                lam=lam, seed=7, arrival_process=proc)
                 for pool, st in stats.items():
                     rows.append({
                         "workload": name, "tail_margin": margin,

@@ -39,6 +39,17 @@ FAILS (exit 1) on a >25% regression.
     faked CPU devices whose collectives run in-process, so absolute
     and relative steps/s say nothing about real-accelerator scaling.
 
+``BENCH_overload.json`` (optional 9th/10th args):
+
+  * fully iteration-clocked with eos disabled, so every gated quantity
+    is DETERMINISTIC across machines: ``no_collapse`` (bounded P99-TTFT
+    inflation + goodput floor at 2x planned capacity), ``ttft_monotone``
+    (P99 TTFT nondecreasing in load), ``token_parity`` (served requests
+    under preemption/swap emit bitwise the unloaded tokens), and
+    ``boundary_agree`` (engine and DES first shed >1% within one load
+    grid step of each other). Per-load goodput is additionally compared
+    against the committed record within the 25% tolerance.
+
 ``BENCH_speculative.json`` (optional 7th/8th args):
 
   * ``headline.token_parity`` — deterministic and gated HARD: the
@@ -58,7 +69,8 @@ to diagnose without re-running.
 Usage: python benchmarks/check_regression.py COMMITTED.json FRESH.json
            [COMMITTED_hotpath.json FRESH_hotpath.json
             [COMMITTED_sharded.json FRESH_sharded.json
-             [COMMITTED_speculative.json FRESH_speculative.json]]]
+             [COMMITTED_speculative.json FRESH_speculative.json
+              [COMMITTED_overload.json FRESH_overload.json]]]]
 """
 import json
 import sys
@@ -189,8 +201,41 @@ def compare_speculative(committed: dict, fresh: dict) -> list:
     return bad
 
 
+def compare_overload(committed: dict, fresh: dict) -> list:
+    """Overload-survival record: all four deterministic flags gate
+    HARD (the record is iteration-clocked with eos disabled, so they
+    cannot legitimately flip on a different machine), plus a goodput
+    floor per load multiple vs the committed record."""
+    bad = []
+    for flag, msg in (
+            ("no_collapse", "P99 TTFT/goodput collapsed past the "
+                            "stability boundary (bounded queue no longer "
+                            "degrading gracefully)"),
+            ("ttft_monotone", "P99 TTFT not monotone in load"),
+            ("token_parity", "served requests under preemption emitted "
+                             "tokens differing from the unloaded run "
+                             "(bitwise resume contract broke)"),
+            ("boundary_agree", "engine and DES stability boundaries "
+                               "diverged by more than one grid step")):
+        if not fresh.get(flag, False):
+            bad.append(f"overload: {flag} is False — {msg}")
+    fresh_rows = {r["load_mult"]: r for r in fresh.get("rows", [])}
+    for r in committed.get("rows", []):
+        fr = fresh_rows.get(r["load_mult"])
+        if fr is None:
+            bad.append(f"overload: load_mult={r['load_mult']} row missing "
+                       "from fresh record")
+            continue
+        old_g, new_g = r["goodput_frac"], fr["goodput_frac"]
+        if old_g > 0 and new_g < (1 - TOLERANCE) * old_g:
+            bad.append(f"overload: goodput at {r['load_mult']}x "
+                       f"{new_g:g} < {1 - TOLERANCE:.2f} * {old_g:g} "
+                       "(committed)")
+    return bad
+
+
 def main(argv) -> int:
-    if len(argv) not in (3, 5, 7, 9):
+    if len(argv) not in (3, 5, 7, 9, 11):
         print(__doc__)
         return 2
     with open(argv[1]) as f:
@@ -213,13 +258,20 @@ def main(argv) -> int:
             fresh_sh = json.load(f)
         bad += compare_sharded(committed_sh, fresh_sh)
         records.append(("sharded_serving", committed_sh, fresh_sh))
-    if len(argv) == 9:
+    if len(argv) >= 9:
         with open(argv[7]) as f:
             committed_sp = json.load(f)
         with open(argv[8]) as f:
             fresh_sp = json.load(f)
         bad += compare_speculative(committed_sp, fresh_sp)
         records.append(("speculative", committed_sp, fresh_sp))
+    if len(argv) >= 11:
+        with open(argv[9]) as f:
+            committed_ov = json.load(f)
+        with open(argv[10]) as f:
+            fresh_ov = json.load(f)
+        bad += compare_overload(committed_ov, fresh_ov)
+        records.append(("overload", committed_ov, fresh_ov))
     if bad:
         print("BENCH REGRESSION GATE FAILED "
               f"(>{TOLERANCE:.0%} below the committed record):")

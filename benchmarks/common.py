@@ -5,7 +5,28 @@ import os
 import time
 from typing import Callable, List
 
+import numpy as np
+
+# The MMPP burst generator lives next to the DES (tests import it from
+# there); benchmarks.common is its canonical benchmark-side home so
+# bench_burstiness and bench_overload share ONE implementation.
+from repro.sim.des import mmpp_arrivals  # noqa: F401  (re-export)
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def mmpp_arrival_iterations(n: int, lam_per_iter: float, seed: int,
+                            burst_factor: float = 1.8,
+                            mean_period_iters: float = 40.0) -> np.ndarray:
+    """MMPP arrival times mapped onto the ENGINE's iteration clock:
+    integer iteration indices (>= 1, nondecreasing) at which request i
+    arrives, for driving an InferenceEngine step loop deterministically
+    (bench_overload). ``lam_per_iter`` is the mean arrival rate in
+    requests per engine iteration."""
+    rng = np.random.default_rng(seed)
+    t = mmpp_arrivals(n, lam_per_iter, rng, burst_factor,
+                      mean_period_iters)
+    return np.maximum(1, np.ceil(t)).astype(np.int64)
 
 
 def emit(table: str, rows: List[dict]) -> None:

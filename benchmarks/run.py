@@ -29,9 +29,10 @@ def main(quick: bool = False) -> None:
                             bench_des_validation, bench_engine_hotpath,
                             bench_fleet_savings, bench_foc_verification,
                             bench_gamma_surface, bench_k_pool_sweep,
-                            bench_paged_kv, bench_planner_latency,
-                            bench_prefix_cache, bench_sharded_serving,
-                            bench_speculative, roofline)
+                            bench_overload, bench_paged_kv,
+                            bench_planner_latency, bench_prefix_cache,
+                            bench_sharded_serving, bench_speculative,
+                            roofline)
     t0 = time.time()
     if quick:
         bench_cost_cliff.run()              # paper Table 1 (analytic)
@@ -42,11 +43,13 @@ def main(quick: bool = False) -> None:
         bench_engine_hotpath.run(quick=True)  # multi-step decode dispatch
         bench_sharded_serving.run(quick=True)  # tp-sharded engines
         bench_speculative.run(quick=True)   # self-speculative decoding
+        bench_burstiness.run(quick=True)    # MMPP arrivals, CI workload
+        bench_overload.run(quick=True)      # overload survival, CI stream
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
               "CSVs in benchmarks/results/, BENCH_paged_kv.json, "
               "BENCH_prefix_cache.json, BENCH_engine_hotpath.json, "
-              "BENCH_sharded_serving.json and BENCH_speculative.json "
-              "at root")
+              "BENCH_sharded_serving.json, BENCH_speculative.json "
+              "and BENCH_overload.json at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -66,6 +69,7 @@ def main(quick: bool = False) -> None:
     bench_paged_kv.run()              # beyond-paper: paged KV cache
     bench_engine_hotpath.run()        # beyond-paper: decode dispatch path
     bench_sharded_serving.run()       # beyond-paper: tp-sharded engines
+    bench_overload.run()              # beyond-paper: overload survival
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")

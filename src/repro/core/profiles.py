@@ -71,6 +71,45 @@ class HardwareProfile:
     # reproduce every pre-speculation number bit-for-bit.
     spec_kappa: float = 1.0
     spec_overhead: float = 0.0
+    # Host-offload KV tier (DESIGN.md §Overload survival): effective
+    # device<->host copy bandwidth for swapping a preempted slot's KV
+    # blocks to host RAM and back. ~25 GB/s is a PCIe-4 x16 link at
+    # realistic efficiency; the default only prices the preemption
+    # path and changes no pre-overload number.
+    swap_gbps: float = 25.0
+
+    # -- overload survival (DESIGN.md §Overload survival) ------------------
+    def swap_seconds(self, tokens: float) -> float:
+        """One-direction device<->host copy time for ``tokens`` worth
+        of KV (swap-out and swap-in each cost this)."""
+        return tokens * self.kv_bytes_per_token / (self.swap_gbps * 1e9)
+
+    def recompute_threshold_tokens(self, c_max: Optional[int] = None) -> int:
+        """Cold-suffix size (tokens NOT restorable from the prefix
+        cache) above which swapping a preempted slot beats discarding
+        and replaying its prefill.
+
+        Replaying t cold tokens costs ceil(t/c_chunk) prefill
+        iterations at t_iter(c_max) each; swapping costs the KV
+        round trip 2*swap_seconds(t) but zero prefill. Both are linear
+        in t at large t, so the policy reduces to comparing per-token
+        rates: recompute wins while
+        t_iter/c_chunk (prefill s/token) < 2*kv_bytes/swap_bw (copy
+        s/token) — i.e. the threshold is where chunked-prefill
+        throughput overtakes the PCIe link. The engine compares the
+        preempted slot's cold-suffix tokens against this knee: small
+        cold suffixes (warm prefix cache) recompute, large ones swap.
+        On A100_LLAMA70B this lands around one c_chunk (prefill is
+        fast, KV is 320KB/token), so cold suffixes beyond ~a chunk
+        swap."""
+        c = c_max if c_max is not None else self.c_ref
+        prefill_s_per_tok = self.t_iter(c) / self.c_chunk
+        swap_s_per_tok = 2.0 * self.kv_bytes_per_token / (self.swap_gbps
+                                                          * 1e9)
+        if prefill_s_per_tok <= 0:
+            return 0
+        return max(0, int(self.c_chunk * swap_s_per_tok
+                          / prefill_s_per_tok))
 
     def n_max(self, c_max: int) -> int:
         """Concurrent slots per REPLICA (= per GPU at

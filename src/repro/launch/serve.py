@@ -60,11 +60,14 @@ def serve_fleet(args) -> None:
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
                                 ctx_scale=512 / plan.pools[-1].c_max,
-                                paged=args.paged or args.prefix_cache,
+                                paged=args.paged or args.prefix_cache
+                                or args.preemption,
                                 prefix_cache=args.prefix_cache,
                                 decode_k=args.decode_k,
                                 spec_k=args.spec_k,
-                                mesh=mesh, tp_degree=args.tp)
+                                mesh=mesh, tp_degree=args.tp,
+                                preemption=args.preemption,
+                                max_queue_wait=args.max_queue_wait)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
@@ -143,6 +146,17 @@ def serve_fleet(args) -> None:
                       f"({st['hit_tokens']} tokens), "
                       f"{st['allocated_blocks']} allocated, "
                       f"{st['registered_blocks']} registered")
+    # overload survival (DESIGN.md §Overload survival): always printed
+    # when the knobs are on, so shed/preempt behavior is observable
+    if args.preemption or args.max_queue_wait is not None:
+        for name, eng in rt.engines.items():
+            snap = eng.utilization_snapshot(detail=True)
+            print(f"  {name}: overload preempted={snap['preempted']} "
+                  f"(swap={snap['swapped_out']} "
+                  f"recompute={snap['recomputed']}) shed={snap['shed']} "
+                  f"hol_bypass={snap['hol_bypass']} "
+                  f"queue_wait_est={snap['queue_wait_est_iters']:.1f} it "
+                  f"mu={snap['service_rate_per_iter']:.3f}/it")
 
 
 def main():
@@ -183,6 +197,19 @@ def main():
                          "devices each (submeshes of --mesh or of a "
                          "flat mesh over all devices; same output "
                          "tokens, 1/D per-device KV)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="--fleet engines survive overload by LIFO "
+                         "preemption with a host-offload KV tier "
+                         "(implies --paged): admission pressure swaps "
+                         "a decoding slot's blocks to host RAM (or "
+                         "discards for recompute) and resumes it "
+                         "bitwise-identically ahead of new arrivals")
+    ap.add_argument("--max-queue-wait", type=float, default=None,
+                    metavar="ITERS",
+                    help="--fleet engines shed new requests once the "
+                         "rolling queue-wait estimate exceeds this many "
+                         "iterations (stability-aware admission; "
+                         "bounded queue instead of TTFT collapse)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="--fleet engines share full prompt blocks via "
                          "the ref-counted prefix cache (implies --paged) "

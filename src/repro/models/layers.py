@@ -452,6 +452,41 @@ def gather_pages(pages, block_tables):
     return pages[bt].reshape(b, nb * bs, *pages.shape[2:])
 
 
+def gather_blocks(pages, idx):
+    """Device-side gather of exactly the named physical blocks from an
+    engine-level paged cache leaf: (L, P, BLOCK_S, ...) x (NB,) ->
+    (L, NB, BLOCK_S, ...). This is the swap-OUT half of the host-offload
+    KV tier (DESIGN.md §Overload survival): a preempted slot's
+    block-table entries are copied device->host verbatim, so a later
+    swap-in restores bit-identical KV whatever physical blocks it lands
+    in."""
+    return jnp.take(pages, idx, axis=1)
+
+
+def scatter_blocks(pages, vals, idx):
+    """Swap-IN half of the host-offload tier: write (L, NB, BLOCK_S,
+    ...) block contents back into the pool at freshly allocated
+    physical indices ``idx`` (NB,). The blocks were private to the
+    preempted slot (shared prefix blocks re-enter through the prefix
+    map, not through here — see engine._swap_in), so the overwrite
+    can never clobber another slot's live KV."""
+    return pages.at[:, idx].set(vals)
+
+
+def gather_slot_row(leaf, s: int, axis: int):
+    """Dense-cache analog of :func:`gather_blocks`: one slot's full
+    cache row, (L, B, S, ...) -> (L, S, ...) at batch axis ``axis``."""
+    return jax.lax.index_in_dim(leaf, s, axis, keepdims=False)
+
+
+def scatter_slot_row(leaf, row, s: int, axis: int):
+    """Dense-cache analog of :func:`scatter_blocks`: write a swapped
+    row back into (possibly another) slot ``s`` at batch axis
+    ``axis``."""
+    idx = (slice(None),) * axis + (s,)
+    return leaf.at[idx].set(row)
+
+
 def paged_decode_attention(p: Params, cfg: ModelConfig, x, kv,
                            block_tables, pos, decode_impl: str = "xla",
                            active=None):

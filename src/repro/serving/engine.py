@@ -46,6 +46,17 @@ The KV cache comes in two layouts (DESIGN.md §Paged KV cache):
     mid-flight preemption unnecessary for correctness. Paged mode
     reproduces dense output tokens exactly on the same request stream.
 
+OVERLOAD SURVIVAL (``preemption=True`` / ``max_queue_wait``;
+DESIGN.md §Overload survival): when paged admission would defer, a
+LIFO victim policy preempts the most recently admitted decoding slot,
+swapping its blocks to a host-RAM tier (or discarding for recompute
+when replay is cheaper); preempted requests re-enter the queue ahead
+of new arrivals and resume bitwise-identically. A bounded queue sheds
+new arrivals once the rolling queue-wait estimate exceeds
+``max_queue_wait`` iterations, and a bounded out-of-order admission
+window (``hol_window``) stops an oversized FIFO head from blocking
+smaller requests that fit.
+
 Paged mode can additionally run a REF-COUNTED PREFIX CACHE
 (``prefix_cache=True``; DESIGN.md §Prefix caching): full prompt blocks
 are content-addressed by a chained block hash, admission maps a new
@@ -105,6 +116,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.configs.base import ModelConfig
 from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.distributed import sharding as SH
+from repro.models import layers as L
 from repro.distributed.context import ParallelContext, make_context
 from repro.models import model as M
 from repro.serving.draft import DEFAULT_NGRAM as DEFAULT_SPEC_NGRAM
@@ -140,6 +152,27 @@ class ServeResult:
     prefill_iters: int
     decode_iters: int
     queue_iters: int               # iterations spent waiting for a slot
+    shed: bool = False             # refused by stability-aware admission
+    preemptions: int = 0           # times this request was preempted
+
+
+@dataclasses.dataclass
+class _PreemptedState:
+    """Host checkpoint of a preempted slot (DESIGN.md §Overload
+    survival). ``host_kv`` is the swap path's device->host copy of
+    exactly the slot's block-table entries (paged: (L, n_blocks, bs,
+    ...) per leaf; dense: the slot's cache row) — or None on the
+    recompute path, where ``replay`` is re-prefilled instead:
+    prompt + duplicated last prompt token + all-but-the-last generated
+    token, i.e. exactly the token whose KV sat at positions
+    0..pos-1 when the slot was preempted."""
+    req: ServeRequest
+    out: List[int]                 # tokens emitted before preemption
+    pos: int                       # next KV position at preemption
+    last_tok: int                  # token the next decode would feed
+    replay: List[int]              # recompute-path prefill token list
+    host_kv: object = None         # pytree of np arrays, or None
+    n_blocks: int = 0              # device blocks held at preemption
 
 
 class InferenceEngine:
@@ -152,7 +185,11 @@ class InferenceEngine:
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = False, decode_k: int = 1,
                  spec_k: int = 1, spec_ngram: int = DEFAULT_SPEC_NGRAM,
-                 mesh=None, parallel: Optional[ParallelContext] = None):
+                 mesh=None, parallel: Optional[ParallelContext] = None,
+                 preemption: bool = False,
+                 max_queue_wait: Optional[float] = None,
+                 swap_threshold: Optional[int] = None,
+                 hol_window: int = 2):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
@@ -275,6 +312,44 @@ class InferenceEngine:
         self._queue_iters: Dict[int, int] = {}
         self._enqueued_at: Dict[int, int] = {}
         self._prefill_iters: Dict[int, int] = {}
+        # -- overload survival (DESIGN.md §Overload survival) --------------
+        # preemption: when paged admission would defer, preempt the most
+        # recently admitted decoding slot (LIFO; ties by largest
+        # remaining worst-case reservation), moving its KV to a host-RAM
+        # tier (swap) or discarding it for replay (recompute).
+        self.preemption = bool(preemption)
+        # bounded queue: estimated queue wait (iterations) above which
+        # submit() REFUSES (sheds) instead of deferring; None = unbounded
+        self.max_queue_wait = max_queue_wait
+        # swap-vs-recompute knee, in COLD-SUFFIX tokens (tokens whose KV
+        # replay would actually recompute, net of live prefix-cache
+        # hits): swap iff cold > threshold. 0 (default) always swaps —
+        # the bitwise-safe choice; callers derive a throughput-based
+        # threshold from HardwareProfile.recompute_threshold_tokens().
+        self.swap_threshold = 0 if swap_threshold is None \
+            else int(swap_threshold)
+        # bounded out-of-order admission window for a deferring FIFO
+        # head (HOL fix), with a per-head bypass cap as starvation guard
+        self.hol_window = max(0, int(hol_window))
+        self.hol_max_bypass = 8 * max(1, self.hol_window)
+        self._preempted: Dict[int, _PreemptedState] = {}
+        # resumed recompute replays end on the duplicated/previous
+        # token; the true next fed token is overridden at prefill end
+        self._resume_last_tok: Dict[int, int] = {}
+        self._rid_preemptions: Dict[int, int] = {}
+        self._hol_bypassed: Dict[int, int] = {}   # head rid -> bypasses
+        self._slot_admit_iter = [0] * n_max       # LIFO victim key
+        self.overload_stats = {"preempted": 0, "swapped_out": 0,
+                               "swapped_in": 0, "recomputed": 0,
+                               "swapped_blocks": 0, "shed": 0,
+                               "hol_bypass": 0}
+        # rolling arrival/service-rate estimate (EMA per iteration) for
+        # the stability-aware admission bound (Little's-law style)
+        self._completed_total = 0
+        self._arrived_since_step = 0
+        self._mu_hat = 0.0            # completions / iteration
+        self._lam_hat = 0.0           # offered arrivals / iteration
+        self._rate_alpha = 0.05
         # buckets that actually compiled a prefill trace this lifetime
         self.prefill_buckets_used: Set[int] = set()
         # -- hot-path accounting (DESIGN.md §Engine hot path) --
@@ -422,14 +497,68 @@ class InferenceEngine:
         return max(per_dev.values(), default=0)
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: ServeRequest) -> None:
+    def submit(self, req: ServeRequest) -> bool:
+        """Enqueue a request. Stability-aware admission (DESIGN.md
+        §Overload survival): with ``max_queue_wait`` set, a request
+        whose estimated queue wait already exceeds the deadline is
+        REFUSED up front (shed) rather than deferred — bounding the
+        queue is what keeps P99 TTFT degrading gracefully instead of
+        collapsing past the stability boundary. Returns False iff
+        shed (the empty result carries ``shed=True``)."""
+        self._arrived_since_step += 1
+        if (self.max_queue_wait is not None and self.waiting
+                and self._completed_total > 0
+                and self.queue_wait_estimate() > self.max_queue_wait):
+            self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0,
+                                                shed=True)
+            self.overload_stats["shed"] += 1
+            return False
         self.waiting.append(req)
         self._enqueued_at[req.rid] = self.iteration
+        return True
 
     def busy(self) -> bool:
         return any(r is not None for r in self.slot_req) or bool(self.waiting)
 
-    def utilization_snapshot(self) -> float:
+    def queue_wait_estimate(self) -> float:
+        """Estimated ITERATIONS a request submitted now would wait for
+        a slot: queue depth / rolling service-rate estimate
+        (completions per iteration). The EMA tracks recent throughput
+        but starts at 0 and needs ~1/alpha iterations to warm up, so it
+        is floored by the CUMULATIVE completion rate — otherwise the
+        first completions make the estimate diverge and shed a burst of
+        perfectly servable early arrivals. Under a real stall (both
+        rates -> 0 with requests queued) the estimate still diverges —
+        exactly when shedding should kick in. 0.0 before any completion
+        (no evidence yet)."""
+        if self._completed_total == 0:
+            return 0.0
+        mu = max(self._mu_hat,
+                 self._completed_total / max(1, self.iteration))
+        if mu <= 0.0:
+            return float("inf")
+        return len(self.waiting) / mu
+
+    def host_tier_blocks(self) -> int:
+        """Device blocks' worth of KV currently parked in the host
+        swap tier (0 for recompute-path preemptions and dense rows)."""
+        return sum(st.n_blocks for st in self._preempted.values())
+
+    def _update_rate_estimates(self, k_iters: int, completions: int) -> None:
+        """Fold one dispatch's worth of iterations into the EMA rate
+        estimates. A decode_k scan advances k iterations per call, so
+        the decay compounds per ITERATION, keeping the estimate
+        comparable across K."""
+        if k_iters <= 0:
+            return
+        decay = (1.0 - self._rate_alpha) ** k_iters
+        self._mu_hat = decay * self._mu_hat \
+            + (1.0 - decay) * (completions / k_iters)
+        self._lam_hat = decay * self._lam_hat \
+            + (1.0 - decay) * (self._arrived_since_step / k_iters)
+        self._arrived_since_step = 0
+
+    def utilization_snapshot(self, detail: bool = False):
         """Mean PER-ITERATION slot occupancy since engine start.
 
         With decode_k > 1 a slot that finishes mid-scan is idle for the
@@ -440,10 +569,25 @@ class InferenceEngine:
         per dispatch. This is the occupancy the DES's rho_hat estimator
         measures, which keeps analytic-vs-engine validation comparable
         at any K. Before the first iteration, falls back to the
-        instantaneous occupied fraction."""
+        instantaneous occupied fraction.
+
+        ``detail=True`` returns a dict instead: the occupancy plus the
+        overload-survival counters (shed / preempt / swap / HOL
+        bypass), queue depth, host-tier blocks and the rolling
+        queue-wait estimate — the operator's overload dashboard."""
         if self.iteration == 0:
-            return sum(r is not None for r in self.slot_req) / self.n_max
-        return self._occ_slot_iters / (self.n_max * self.iteration)
+            occ = sum(r is not None for r in self.slot_req) / self.n_max
+        else:
+            occ = self._occ_slot_iters / (self.n_max * self.iteration)
+        if not detail:
+            return occ
+        return {"occupancy": occ,
+                "queue_depth": len(self.waiting),
+                "queue_wait_est_iters": self.queue_wait_estimate(),
+                "service_rate_per_iter": self._mu_hat,
+                "arrival_rate_per_iter": self._lam_hat,
+                "host_tier_blocks": self.host_tier_blocks(),
+                **self.overload_stats}
 
     def dispatches_per_token(self) -> float:
         """Decode-only jitted calls per token THEY emitted — the host
@@ -533,6 +677,7 @@ class InferenceEngine:
         The iteration clock advances by the number of model iterations
         the dispatch performed (decode_k for a scan), never by
         dispatches."""
+        it0, done0 = self.iteration, self._completed_total
         self.iteration += 1
         self._admit()
         chunks: Dict[int, List[int]] = {}
@@ -580,6 +725,8 @@ class InferenceEngine:
                 self._run_decode(decode_mask)
         else:
             self._occ_slot_iters += occupied
+        self._update_rate_estimates(self.iteration - it0,
+                                    self._completed_total - done0)
 
     # ------------------------------------------------------------ internals
     def _worst_case_blocks(self, req: ServeRequest) -> int:
@@ -643,104 +790,335 @@ class InferenceEngine:
                 self.prefix_stats["registered_blocks"] += 1
         self._slot_registered[s] = done
 
-    def _refuse(self, req: ServeRequest) -> None:
-        """Refuse the FIFO head: empty result, no leaked host entries."""
-        self.waiting.pop(0)
+    def _refuse(self, req: ServeRequest, qi: int = 0) -> None:
+        """Refuse waiting[qi]: empty result, no leaked host entries."""
+        self.waiting.pop(qi)
         self.results[req.rid] = ServeResult(req.rid, [], 0, 0, 0)
         self._enqueued_at.pop(req.rid, None)
         self._queue_iters.pop(req.rid, None)
         self._req_hashes.pop(req.rid, None)
+        self._hol_bypassed.pop(req.rid, None)
+        self._resume_last_tok.pop(req.rid, None)
+        self._preempted.pop(req.rid, None)
+        self._rid_preemptions.pop(req.rid, None)
 
     def _admit(self) -> None:
         for s in range(self.n_max):
             if self.slot_req[s] is not None:
                 continue
             while self.waiting:
-                req = self.waiting[0]
-                if len(req.tokens) + req.max_new_tokens > self.c_max:
-                    # gateway guarantees this never happens (Eq. 15); a
-                    # direct-submitted oversized request is refused —
-                    # WITHOUT consuming this slot's admit chance (the
-                    # next waiting request gets the slot this same
-                    # iteration), and without leaking its host entries.
-                    self._refuse(req)
+                st = self._try_admit(s, 0, consume=True)
+                if st == "refused":
+                    # the slot's admit chance is not consumed: the next
+                    # waiting request gets it this same iteration
                     continue
-                hits = 0
-                if self.paged:
-                    worst = self._worst_case_blocks(req)
-                    if worst > self.num_blocks:
-                        # can NEVER be covered (pool smaller than the
-                        # request's worst case): refuse like oversized,
-                        # or the FIFO head would defer forever
-                        self._refuse(req)
-                        continue
-                    if self.prefix_cache:
-                        # memoized per rid: a blocked FIFO head probes
-                        # every iteration and must not rehash its whole
-                        # prompt each time (host hot path)
-                        if req.rid not in self._req_hashes:
-                            self._req_hashes[req.rid] = \
-                                self._chain_hashes(req.tokens)
-                        hashes = self._req_hashes[req.rid]
-                    else:
-                        hashes = []
-                    hits = self._prefix_hits(hashes)
-                    # cached leading blocks are reused, not allocated:
-                    # only the cold suffix needs worst-case coverage.
-                    # BUT pinning an EVICTABLE hit (ref 0, cached-free)
-                    # removes it from the allocatable tiers without
-                    # adding to _reserved, so it must be charged here
-                    # too or earlier slots' outstanding reservations
-                    # get over-committed and the allocator runs dry.
-                    need = worst - hits
-                    evictable_hits = sum(
-                        1 for i in range(hits)
-                        if self._ref[self._prefix_map[hashes[i]]] == 0)
-                    if need + evictable_hits > \
-                            self._available_blocks() - self._reserved:
-                        # Admission control (DESIGN.md §Paged KV cache):
-                        # the allocatable blocks cannot cover this
-                        # request's worst case. It stays queued (FIFO:
-                        # later requests must not jump it) until
-                        # completions return blocks — the invariant
-                        # that makes mid-flight preemption unnecessary.
-                        return
-                    blocks = self._slot_blocks[s]
-                    for i in range(hits):
-                        phys = self._prefix_map[hashes[i]]
-                        if self._ref[phys] == 0:    # was evictable: pin it
-                            del self._cached_free[phys]
-                        self._ref[phys] += 1
-                        self.block_tables[s, len(blocks)] = phys
-                        blocks.append(phys)
-                    if hits:
-                        self._bt_device = None
-                    self._reserved += need
-                    self._slot_reserved[s] = need
-                    self._slot_hashes[s] = hashes
-                    self._slot_registered[s] = hits
-                    if self.prefix_cache:
-                        self.prefix_stats["lookups"] += 1
-                        self.prefix_stats["hit_blocks"] += hits
-                        self.prefix_stats["hit_tokens"] += \
-                            hits * self.block_size
-                self.waiting.pop(0)
-                self._req_hashes.pop(req.rid, None)
-                self.slot_req[s] = req
-                self._dev_dirty = True    # slot state rewritten below
-                # prefill skips the cached prefix entirely: it resumes
-                # at the first cold token via the start_pos chunk path
-                self.slot_pos[s] = hits * self.block_size if self.paged else 0
-                self.slot_prefill_left[s] = \
-                    list(req.tokens[int(self.slot_pos[s]):])
-                self.slot_out[s] = []
-                if not self.slot_prefill_left[s] and req.tokens:
-                    # fully cached prompt: decode can start this same
-                    # iteration from the last prompt token
-                    self.slot_last_tok[s] = req.tokens[-1]
-                self._queue_iters[req.rid] = \
-                    self.iteration - self._enqueued_at.pop(req.rid)
-                break
+                if st == "admitted":
+                    break
+                # The FIFO head DEFERS: the allocatable blocks cannot
+                # cover its worst case (DESIGN.md §Paged KV cache).
+                # Escalations, in order:
+                # 1) preemption (opt-in): free blocks by preempting the
+                #    most recently admitted decoding slot. A RESUMED
+                #    head never triggers preemption — a swap-in that
+                #    preempted its preemptor would ping-pong forever.
+                if self.preemption \
+                        and self.waiting[0].rid not in self._preempted:
+                    victim = self._select_victim()
+                    if victim is not None:
+                        self.preempt_slot(victim, requeue_index=1)
+                        continue       # retry the head on freed blocks
+                # 2) bounded out-of-order admission (HOL fix): a small
+                #    queued request may take the slot, starvation-capped
+                if self._try_hol_bypass(s):
+                    break
+                # 3) stay queued until completions return blocks
+                return
+
+    def _try_admit(self, s: int, qi: int, consume: bool) -> str:
+        """Try to place ``waiting[qi]`` into the free slot ``s``.
+
+        Returns "admitted", "refused" (popped with an empty result —
+        only when ``consume``), "defer" (fits the engine but not the
+        block pool right now), or "skip" (would be refused, but this is
+        a HOL bypass probe which must not consume the request)."""
+        req = self.waiting[qi]
+        state = self._preempted.get(req.rid)
+        if len(req.tokens) + req.max_new_tokens > self.c_max:
+            # gateway guarantees this never happens (Eq. 15); a
+            # direct-submitted oversized request is refused without
+            # leaking host entries
+            if not consume:
+                return "skip"
+            self._refuse(req, qi)
+            return "refused"
+        if state is not None and state.host_kv is not None:
+            return self._swap_in(s, qi, state)
+        # fresh admission — or a preempted request REPLAYING through
+        # prefill (recompute path): identical block arithmetic over the
+        # replay token list, which reconstructs cache positions
+        # 0..pos-1 exactly (see _PreemptedState)
+        tokens_full = req.tokens if state is None else state.replay
+        budget_left = req.max_new_tokens \
+            - (0 if state is None else len(state.out))
+        hits = 0
+        if self.paged:
+            worst = math.ceil((len(tokens_full) + budget_left)
+                              / self.block_size)
+            if worst > self.num_blocks:
+                # can NEVER be covered (pool smaller than the request's
+                # worst case): refuse like oversized, or the FIFO head
+                # would defer forever
+                if not consume:
+                    return "skip"
+                self._refuse(req, qi)
+                return "refused"
+            if self.prefix_cache:
+                # memoized per rid: a blocked FIFO head probes every
+                # iteration and must not rehash its whole prompt each
+                # time (host hot path)
+                if req.rid not in self._req_hashes:
+                    self._req_hashes[req.rid] = \
+                        self._chain_hashes(tokens_full)
+                hashes = self._req_hashes[req.rid]
+            else:
+                hashes = []
+            hits = self._prefix_hits(hashes)
+            # cached leading blocks are reused, not allocated: only the
+            # cold suffix needs worst-case coverage. BUT pinning an
+            # EVICTABLE hit (ref 0, cached-free) removes it from the
+            # allocatable tiers without adding to _reserved, so it must
+            # be charged here too or earlier slots' outstanding
+            # reservations get over-committed and the allocator runs dry.
+            need = worst - hits
+            evictable_hits = sum(
+                1 for i in range(hits)
+                if self._ref[self._prefix_map[hashes[i]]] == 0)
+            if need + evictable_hits > \
+                    self._available_blocks() - self._reserved:
+                return "defer"
+            blocks = self._slot_blocks[s]
+            for i in range(hits):
+                phys = self._prefix_map[hashes[i]]
+                if self._ref[phys] == 0:        # was evictable: pin it
+                    del self._cached_free[phys]
+                self._ref[phys] += 1
+                self.block_tables[s, len(blocks)] = phys
+                blocks.append(phys)
+            if hits:
+                self._bt_device = None
+            self._reserved += need
+            self._slot_reserved[s] = need
+            self._slot_hashes[s] = hashes
+            self._slot_registered[s] = hits
+            if self.prefix_cache:
+                self.prefix_stats["lookups"] += 1
+                self.prefix_stats["hit_blocks"] += hits
+                self.prefix_stats["hit_tokens"] += hits * self.block_size
+        self.waiting.pop(qi)
+        self._req_hashes.pop(req.rid, None)
+        self._hol_bypassed.pop(req.rid, None)
+        self.slot_req[s] = req
+        self._dev_dirty = True    # slot state rewritten below
+        self._slot_admit_iter[s] = self.iteration
+        # prefill skips the cached prefix entirely: it resumes at the
+        # first cold token via the start_pos chunk path
+        self.slot_pos[s] = hits * self.block_size if self.paged else 0
+        self.slot_prefill_left[s] = \
+            list(tokens_full[int(self.slot_pos[s]):])
+        self.slot_out[s] = [] if state is None else list(state.out)
+        if state is not None:
+            del self._preempted[req.rid]
+            if self.slot_prefill_left[s]:
+                # the replay list ends one token EARLY (the most recent
+                # emitted token was never cached); once its prefill
+                # lands, decode must feed that token, not the chunk's
+                # last — see _advance_prefill_host
+                self._resume_last_tok[req.rid] = state.last_tok
+            elif tokens_full:
+                self.slot_last_tok[s] = state.last_tok
+        elif not self.slot_prefill_left[s] and req.tokens:
+            # fully cached prompt: decode can start this same iteration
+            # from the last prompt token
+            self.slot_last_tok[s] = req.tokens[-1]
+        self._queue_iters[req.rid] = self._queue_iters.get(req.rid, 0) \
+            + self.iteration - self._enqueued_at.pop(req.rid)
+        return "admitted"
+
+    def _try_hol_bypass(self, s: int) -> bool:
+        """Head-of-line fix: the FIFO head defers on blocks, but a
+        request within the next ``hol_window`` queue positions may fit
+        the pool — admit it out of order. Starvation guard: each head
+        tolerates at most ``hol_max_bypass`` jumps before the queue
+        goes strictly FIFO until it admits."""
+        if self.hol_window <= 0 or len(self.waiting) < 2:
+            return False
+        head_rid = self.waiting[0].rid
+        bypasses = self._hol_bypassed.get(head_rid, 0)
+        if bypasses >= self.hol_max_bypass:
+            return False
+        for qi in range(1, min(len(self.waiting), 1 + self.hol_window)):
+            if self._try_admit(s, qi, consume=False) == "admitted":
+                self._hol_bypassed[head_rid] = bypasses + 1
+                self.overload_stats["hol_bypass"] += 1
+                return True
+        return False
+
+    # -- preemption + host-offload KV tier (DESIGN.md §Overload survival) --
+    def _select_victim(self) -> Optional[int]:
+        """LIFO victim policy: the most recently admitted DECODING slot
+        (mid-prefill slots have not finished paying their admission
+        cost), ties broken by the largest remaining worst-case
+        reservation — the victim that frees the most future blocks."""
+        cands = [s for s in range(self.n_max)
+                 if self.slot_req[s] is not None
+                 and not self.slot_prefill_left[s]]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (self._slot_admit_iter[s],
+                                         self._slot_reserved[s], s))
+
+    def preempt_slot(self, s: int, mode: Optional[str] = None,
+                     requeue_index: int = 0) -> None:
+        """Preempt a DECODING slot: checkpoint its host state, move its
+        KV off the device — SWAP (device->host copy of exactly the
+        slot's block-table entries; the free list reclaims the device
+        blocks) or RECOMPUTE (discard and replay through prefill,
+        cheap when the prefix cache still holds the prompt blocks) —
+        and re-enqueue it AHEAD of new arrivals. ``mode`` forces
+        "swap"/"recompute"; default applies the threshold policy on
+        the cold suffix. Resume is handled by _try_admit/_swap_in and
+        is bitwise-identical to an unloaded run on the swap path (the
+        masked no-op invariant makes a slot's tokens independent of
+        its co-tenants; the host copy restores its exact KV bits)."""
+        req = self.slot_req[s]
+        assert req is not None and not self.slot_prefill_left[s], \
+            "can only preempt a decoding slot"
+        pos = int(self.slot_pos[s])
+        out = list(self.slot_out[s])
+        if mode is None:
+            restorable = 0
+            if self.paged and self.prefix_cache:
+                # leading full blocks still content-addressable would
+                # be restored by replay, not recomputed
+                for h in self._slot_hashes[s]:
+                    if h not in self._prefix_map:
+                        break
+                    restorable += self.block_size
+            cold = pos - min(restorable, pos)
+            mode = "swap" if cold > self.swap_threshold else "recompute"
+        if mode == "swap":
+            host_kv = self._swap_out(s)
+            n_blocks = len(self._slot_blocks[s]) if self.paged else 0
+            self.overload_stats["swapped_out"] += 1
+        else:
+            host_kv, n_blocks = None, 0
+            self.overload_stats["recomputed"] += 1
+        # replay reconstructs cache positions 0..pos-1: the prompt, the
+        # DUPLICATED last prompt token the first decode dispatch wrote
+        # at position P, then all but the newest emitted token (its KV
+        # was never written — it is the token decode feeds next)
+        replay = list(req.tokens) if not out else \
+            list(req.tokens) + [req.tokens[-1]] + out[:-1]
+        self._preempted[req.rid] = _PreemptedState(
+            req=req, out=out, pos=pos,
+            last_tok=int(self.slot_last_tok[s]), replay=replay,
+            host_kv=host_kv, n_blocks=n_blocks)
+        self.overload_stats["preempted"] += 1
+        self._rid_preemptions[req.rid] = \
+            self._rid_preemptions.get(req.rid, 0) + 1
+        # re-enter the queue AHEAD of new arrivals (requeue_index=1
+        # from _admit keeps the currently-deferring head in front);
+        # enqueue BEFORE releasing so the idle-point invariant check
+        # sees the preempted rid queued
+        self.waiting.insert(min(requeue_index, len(self.waiting)), req)
+        self._enqueued_at[req.rid] = self.iteration
+        self.slot_req[s] = None
+        self.slot_out[s] = []
+        self.slot_pos[s] = 0
+        self._dev_dirty = True
+        if self.paged:
+            self._release_slot(s)
+
+    def _swap_out(self, s: int):
+        """Device->host copy of slot ``s``'s KV: exactly its
+        block-table entries in paged mode (shared prefix blocks
+        included — the host copy must be self-contained, the originals
+        may be evicted before resume), or its cache row in dense mode.
+        np.asarray forces the transfer; the result aliases no device
+        buffer."""
+        if self.paged:
+            idx = np.array(self._slot_blocks[s], np.int32)
+            self.overload_stats["swapped_blocks"] += len(idx)
+            if len(idx) == 0:
+                return jax.tree.map(
+                    lambda a: np.zeros((a.shape[0], 0) + a.shape[2:],
+                                       a.dtype), self.cache)
+            di = self._upload(idx)
+            return jax.tree.map(
+                lambda a: np.asarray(L.gather_blocks(a, di)), self.cache)
+        return jax.tree.map(
+            lambda a: np.asarray(
+                L.gather_slot_row(a, s, self._batch_axis(a))), self.cache)
+
+    def _swap_in(self, s: int, qi: int, state: _PreemptedState) -> str:
+        """Swap-path resume into free slot ``s``: allocate fresh device
+        blocks (the originals were reclaimed), rewrite the block table,
+        scatter the host copy back, and restore the slot's host state
+        so the next decode continues bitwise where the unloaded run
+        would. Defers like a fresh admission when the pool cannot cover
+        the request's (unchanged) worst case."""
+        req = state.req
+        if self.paged:
+            worst = self._worst_case_blocks(req)
+            if worst > self._available_blocks() - self._reserved:
+                return "defer"
+            n = state.n_blocks
+            fresh = []
+            for _ in range(n):
+                phys = self._alloc_block()
+                self._ref[phys] = 1
+                fresh.append(phys)
+            self.prefix_stats["allocated_blocks"] += n
+            self._slot_blocks[s] = fresh
+            self.block_tables[s, :] = 0
+            self.block_tables[s, :n] = fresh
+            self._bt_device = None
+            self._reserved += worst - n
+            self._slot_reserved[s] = worst - n
+            if n:
+                di = self._upload(np.array(fresh, np.int32))
+                self.cache = jax.tree.map(
+                    lambda c, h: L.scatter_blocks(c, self._upload(h), di),
+                    self.cache, state.host_kv)
+            # restored blocks re-enter PRIVATE: this slot's prefix
+            # registrations were decref'd at preemption, and publishing
+            # the new physical copies would duplicate hashes
+            self._slot_hashes[s] = []
+            self._slot_registered[s] = 0
+        else:
+            self.cache = jax.tree.map(
+                lambda c, h: L.scatter_slot_row(
+                    c, self._upload(h), s, self._batch_axis(c)),
+                self.cache, state.host_kv)
+        if self._cache_shardings is not None:
+            # eager scatters above leave the result wherever jax put
+            # it; re-pin to the serving shardings before the next step
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+        self.waiting.pop(qi)
+        del self._preempted[req.rid]
+        self._req_hashes.pop(req.rid, None)
+        self._hol_bypassed.pop(req.rid, None)
+        self.slot_req[s] = req
+        self._dev_dirty = True
+        self._slot_admit_iter[s] = self.iteration
+        self.slot_pos[s] = state.pos
+        self.slot_prefill_left[s] = []
+        self.slot_out[s] = list(state.out)
+        self.slot_last_tok[s] = state.last_tok
+        self._queue_iters[req.rid] = self._queue_iters.get(req.rid, 0) \
+            + self.iteration - self._enqueued_at.pop(req.rid)
+        self.overload_stats["swapped_in"] += 1
+        return "admitted"
 
     def _ensure_blocks(self, s: int, tokens_needed: int) -> None:
         """Allocate physical blocks for slot ``s`` until it covers
@@ -808,7 +1186,18 @@ class InferenceEngine:
                                 tiers partition the pool)
 
         Cheap (host-side ints); called at engine idle and from tests at
-        every iteration."""
+        every iteration. Also covers the host-offload tier (ISSUE 8):
+        every preempted rid must be queued for resume, and a swapped
+        state's host copy must hold exactly its recorded block count on
+        every cache leaf."""
+        waiting_rids = {r.rid for r in self.waiting}
+        for rid, st in self._preempted.items():
+            assert rid in waiting_rids, \
+                f"preempted rid {rid} not queued for resume"
+            if self.paged and st.host_kv is not None:
+                for leaf in jax.tree.leaves(st.host_kv):
+                    assert leaf.shape[1] == st.n_blocks, \
+                        "host-tier copy disagrees with its block count"
         if not self.paged:
             return
         cnt = Counter(b for blocks in self._slot_blocks for b in blocks)
@@ -891,6 +1280,12 @@ class InferenceEngine:
             self._prefill_iters[rid] = self._prefill_iters.get(rid, 0) + 1
             if not self.slot_prefill_left[s]:
                 self.slot_last_tok[s] = chunk[-1]
+                if rid in self._resume_last_tok:
+                    # recompute-path resume: the replay deliberately
+                    # stops one token early (the newest emitted token's
+                    # KV was never written); decode must feed IT next,
+                    # not the replay's final token
+                    self.slot_last_tok[s] = self._resume_last_tok.pop(rid)
             if self.paged and self.prefix_cache:
                 # full prompt blocks this chunk completed become
                 # content-addressable for later admissions
@@ -1114,7 +1509,9 @@ class InferenceEngine:
             rid=req.rid, output_tokens=self.slot_out[s],
             prefill_iters=self._prefill_iters.pop(req.rid, 0),
             decode_iters=len(self.slot_out[s]),
-            queue_iters=self._queue_iters.pop(req.rid, 0))
+            queue_iters=self._queue_iters.pop(req.rid, 0),
+            preemptions=self._rid_preemptions.pop(req.rid, 0))
+        self._completed_total += 1
         self.slot_req[s] = None
         if self.paged:
             self._release_slot(int(s))

@@ -51,6 +51,8 @@ class GatewayResponse:
     prefill_iters: int
     decode_iters: int
     queue_iters: int
+    shed: bool = False             # refused by stability-aware admission
+    preemptions: int = 0
 
 
 class FleetRuntime:
@@ -68,7 +70,10 @@ class FleetRuntime:
                  c_chunk: int = 512, paged: bool = False,
                  kv_block_size: int = DEFAULT_KV_BLOCK,
                  prefix_cache: bool = False, decode_k: int = 1,
-                 spec_k: int = 1, mesh=None, tp_degree: int = 1):
+                 spec_k: int = 1, mesh=None, tp_degree: int = 1,
+                 preemption: bool = False,
+                 max_queue_wait: Optional[float] = None,
+                 swap_threshold: Optional[int] = None):
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -113,13 +118,21 @@ class FleetRuntime:
         # (DESIGN.md §Speculative decoding) — still the same output
         # tokens (greedy-argmax-exact verify), >1 of them per model
         # iteration when the traffic repeats itself.
+        # preemption / max_queue_wait / swap_threshold switch every
+        # engine into overload-survival mode (DESIGN.md §Overload
+        # survival): LIFO preemption with a host-offload KV tier, and
+        # stability-aware admission that sheds once the rolling
+        # queue-wait estimate exceeds the deadline (iterations).
         self.engines: Dict[str, InferenceEngine] = {
             names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
                                       c_chunk, paged=paged,
                                       block_size=kv_block_size,
                                       prefix_cache=prefix_cache,
                                       decode_k=decode_k, spec_k=spec_k,
-                                      mesh=self._submeshes[i])
+                                      mesh=self._submeshes[i],
+                                      preemption=preemption,
+                                      max_queue_wait=max_queue_wait,
+                                      swap_threshold=swap_threshold)
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
 
@@ -137,7 +150,10 @@ class FleetRuntime:
                   kv_block_size: int = DEFAULT_KV_BLOCK,
                   prefix_cache: bool = False,
                   decode_k: int = 1, spec_k: int = 1,
-                  mesh=None, tp_degree: int = 1) -> "FleetRuntime":
+                  mesh=None, tp_degree: int = 1,
+                  preemption: bool = False,
+                  max_queue_wait: Optional[float] = None,
+                  swap_threshold: Optional[int] = None) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -161,7 +177,9 @@ class FleetRuntime:
                    c_maxes, c_chunk, paged=paged,
                    kv_block_size=kv_block_size, prefix_cache=prefix_cache,
                    decode_k=decode_k, spec_k=spec_k, mesh=mesh,
-                   tp_degree=tp_degree)
+                   tp_degree=tp_degree, preemption=preemption,
+                   max_queue_wait=max_queue_wait,
+                   swap_threshold=swap_threshold)
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
@@ -208,7 +226,8 @@ class FleetRuntime:
                 compression_ms=d.compression_ms,
                 output_tokens=res.output_tokens,
                 prefill_iters=res.prefill_iters,
-                decode_iters=res.decode_iters, queue_iters=res.queue_iters)
+                decode_iters=res.decode_iters, queue_iters=res.queue_iters,
+                shed=res.shed, preemptions=res.preemptions)
         return out
 
 

@@ -50,6 +50,14 @@ class PoolStats:
     waits: np.ndarray
     ttfts: np.ndarray
     thin_frac: float
+    shed: int = 0             # refused by stability-aware admission
+    preempted: int = 0        # slot preemptions (overload survival)
+
+    @property
+    def goodput_frac(self) -> float:
+        """Fraction of offered requests actually served (1 - shed)."""
+        offered = self.served + self.shed
+        return self.served / offered if offered else 1.0
 
     @property
     def utilization(self) -> float:
@@ -67,34 +75,57 @@ class PoolStats:
 def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
                   c_slots: int, t_iter: float, t_chunk: float,
                   c_chunk: int, warmup: float, name: str = "pool",
-                  n_gpus: int = 0, thin_frac: float = 1.0) -> PoolStats:
-    """Event-driven M/G/c slot simulation for one pool (FIFO)."""
+                  n_gpus: int = 0, thin_frac: float = 1.0,
+                  max_queue_wait: Optional[float] = None,
+                  preempt: bool = False,
+                  swap_s: float = 0.0) -> PoolStats:
+    """Event-driven M/G/c slot simulation for one pool (FIFO).
+
+    Overload-survival extensions (DESIGN.md §Overload survival; both
+    default OFF, leaving the base path byte-identical):
+
+      * ``max_queue_wait``: stability-aware admission — an arrival is
+        SHED (never served, excluded from wait/TTFT stats) when the
+        queue-wait estimate ``(queue+1) * E[S] / c_slots`` exceeds the
+        deadline, mirroring the engine's Little's-law estimator.
+      * ``preempt``: an arrival that would queue instead preempts the
+        most recently STARTED in-service request (the engine's LIFO
+        victim policy); the victim resumes at the queue FRONT with its
+        remaining service plus ``2 * swap_s`` (swap-out + swap-in).
+        Each request is preempted at most once (anti-thrash).
+    """
     from collections import deque
     n = len(arrivals)
     service = (np.ceil(l_in / c_chunk) + l_out) * t_iter
     prefill = np.ceil(l_in / c_chunk) * t_chunk
     starts = np.empty(n)
-    busy_heap: list = []      # completion times of in-service requests
-    queue: deque = deque()    # FIFO of waiting request indices
-    for i in range(n):
-        t = arrivals[i]
-        # free slots up to time t; freed slots admit queued requests FIFO
-        while busy_heap and busy_heap[0] <= t:
+    if max_queue_wait is None and not preempt:
+        busy_heap: list = []  # completion times of in-service requests
+        queue: deque = deque()  # FIFO of waiting request indices
+        for i in range(n):
+            t = arrivals[i]
+            # free slots up to t; freed slots admit queued requests FIFO
+            while busy_heap and busy_heap[0] <= t:
+                tc = heapq.heappop(busy_heap)
+                if queue:
+                    j = queue.popleft()
+                    starts[j] = tc      # tc >= arrivals[j] (it was queued)
+                    heapq.heappush(busy_heap, tc + service[j])
+            if len(busy_heap) < c_slots:
+                starts[i] = t
+                heapq.heappush(busy_heap, t + service[i])
+            else:
+                queue.append(i)
+        while queue:                    # drain
             tc = heapq.heappop(busy_heap)
-            if queue:
-                j = queue.popleft()
-                starts[j] = tc          # tc >= arrivals[j] (it was queued)
-                heapq.heappush(busy_heap, tc + service[j])
-        if len(busy_heap) < c_slots:
-            starts[i] = t
-            heapq.heappush(busy_heap, t + service[i])
-        else:
-            queue.append(i)
-    while queue:                        # drain
-        tc = heapq.heappop(busy_heap)
-        j = queue.popleft()
-        starts[j] = tc
-        heapq.heappush(busy_heap, tc + service[j])
+            j = queue.popleft()
+            starts[j] = tc
+            heapq.heappush(busy_heap, tc + service[j])
+        shed_count = preempt_count = 0
+        shed_mask = np.zeros(n, bool)
+    else:
+        starts, shed_mask, shed_count, preempt_count = _simulate_overload(
+            arrivals, service, c_slots, max_queue_wait, preempt, swap_s)
 
     # Busy-time accounting (documented invariant): the measurement
     # window is [warmup, last arrival] — the interval where the pool is
@@ -111,11 +142,111 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
     busy_time = float(service[started].sum())
     waits = starts - arrivals
     ttfts = waits + prefill + t_iter
-    mask = arrivals >= t0
-    return PoolStats(name=name, n_gpus=n_gpus, n_slots=c_slots, served=n,
+    # shed requests never start: they carry no wait/TTFT sample (their
+    # cost shows up in goodput_frac, not the latency tail)
+    mask = (arrivals >= t0) & ~shed_mask
+    return PoolStats(name=name, n_gpus=n_gpus, n_slots=c_slots,
+                     served=n - shed_count,
                      busy_time=busy_time, horizon=t1 - t0,
                      waits=waits[mask], ttfts=ttfts[mask],
-                     thin_frac=thin_frac)
+                     thin_frac=thin_frac, shed=shed_count,
+                     preempted=preempt_count)
+
+
+def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
+                       c_slots: int, max_queue_wait: Optional[float],
+                       preempt: bool, swap_s: float):
+    """Slot simulation with shedding and/or preemption — the DES mirror
+    of the engine's overload policy (see simulate_pool's docstring).
+    Returns (starts, shed_mask, shed_count, preempt_count); a shed
+    request's start is +inf."""
+    from collections import deque
+    n = len(arrivals)
+    es_mean = float(service.mean()) if n else 0.0
+    starts = np.full(n, np.inf)
+    rem = service.copy()            # remaining service at (re)start
+    comp_heap: list = []            # (completion_time, j)
+    start_heap: list = []           # (-start_time, j, completion) LIFO
+    cur_tc = np.full(n, -1.0)       # j's current scheduled completion
+    in_service = np.zeros(n, bool)
+    queue: deque = deque()          # waiting indices; preempted at FRONT
+    preempted_once = set()
+    n_busy = 0
+    shed_mask = np.zeros(n, bool)
+    preempt_count = 0
+
+    def start(j, t):
+        nonlocal n_busy
+        if starts[j] == np.inf:
+            starts[j] = t
+        tc = t + rem[j]
+        cur_tc[j] = tc
+        in_service[j] = True
+        heapq.heappush(comp_heap, (tc, j))
+        heapq.heappush(start_heap, (-t, j, tc))
+        n_busy += 1
+
+    def drain(t):
+        nonlocal n_busy
+        while comp_heap and comp_heap[0][0] <= t:
+            tc, j = heapq.heappop(comp_heap)
+            if not in_service[j] or cur_tc[j] != tc:
+                continue            # lazily removed (preempted/restarted)
+            in_service[j] = False
+            n_busy -= 1
+            if queue:
+                start(queue.popleft(), tc)
+
+    for i in range(n):
+        t = arrivals[i]
+        drain(t)
+        if n_busy < c_slots:
+            start(i, t)
+            continue
+        # stability-aware admission: shed once the estimated wait
+        # (Little's law over the current backlog) exceeds the deadline
+        if max_queue_wait is not None and \
+                (len(queue) + 1) * es_mean / c_slots > max_queue_wait:
+            shed_mask[i] = True
+            continue
+        if preempt:
+            victim = None
+            skipped = []        # valid entries shielded by anti-thrash
+            while start_heap:
+                entry = heapq.heappop(start_heap)
+                _, j, tc = entry
+                if not in_service[j] or cur_tc[j] != tc:
+                    continue    # stale entry (completed/restarted)
+                if j in preempted_once:
+                    skipped.append(entry)
+                    continue
+                victim = j
+                break
+            for e in skipped:
+                heapq.heappush(start_heap, e)
+            if victim is not None:
+                in_service[victim] = False
+                n_busy -= 1
+                preempted_once.add(victim)
+                preempt_count += 1
+                # victim resumes at the queue FRONT with its remaining
+                # service plus the swap-out + swap-in penalty
+                rem[victim] = cur_tc[victim] - t + 2.0 * swap_s
+                queue.appendleft(victim)
+                start(i, t)
+                continue
+        queue.append(i)
+    # drain the backlog
+    while queue:
+        if not comp_heap:
+            break
+        tc, j = heapq.heappop(comp_heap)
+        if not in_service[j] or cur_tc[j] != tc:
+            continue
+        in_service[j] = False
+        n_busy -= 1
+        start(queue.popleft(), tc)
+    return starts, shed_mask, int(shed_mask.sum()), preempt_count
 
 
 def mmpp_arrivals(n: int, lam: float, rng, burst_factor: float = 1.8,
@@ -214,9 +345,16 @@ class FleetDES:
 
     def run(self, n_requests: int = 30_000, lam: float = 1000.0,
             seed: int = 0, arrival_process: str = "poisson",
-            burst_factor: float = 1.8) -> Dict[str, PoolStats]:
+            burst_factor: float = 1.8,
+            max_queue_wait: Optional[float] = None,
+            preempt: bool = False) -> Dict[str, PoolStats]:
         """Simulate and return per-pool stats keyed by pool name
-        ("short"/"long" for K<=2, "pool{i}" for K>=3)."""
+        ("short"/"long" for K<=2, "pool{i}" for K>=3).
+
+        ``max_queue_wait`` (seconds) / ``preempt`` switch each pool's
+        simulation into the overload-survival policy (see
+        simulate_pool); the swap penalty is the pool profile's
+        ``swap_seconds`` over its band's mean KV tokens."""
         w, plan = self.workload, self.plan
         rng = np.random.default_rng(seed)
         k = plan.k
@@ -297,12 +435,18 @@ class FleetDES:
             thin = c_sim / c_full
             keep = mask & (rng.uniform(size=n_total) < thin)
             idx = np.where(keep)[0]
+            swap_s = 0.0
+            if preempt:
+                band_tok = float(l_tok[mask].mean()) if mask.any() \
+                    else float(pp.c_max)
+                swap_s = prof.swap_seconds(band_tok)
             out[pp.name] = simulate_pool(
                 arrivals[idx], li_eff[idx], l_out[idx],
                 c_sim, t_it,
                 prof.w_ms / 1000.0, prof.c_chunk,
                 warmup=0.25 * horizon, name=pp.name, n_gpus=pp.n_gpus,
-                thin_frac=thin)
+                thin_frac=thin, max_queue_wait=max_queue_wait,
+                preempt=preempt, swap_s=swap_s)
         return out
 
 

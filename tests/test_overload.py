@@ -1,0 +1,428 @@
+"""Overload survival (ISSUE 8): preemption with a host-offload KV
+tier, stability-aware admission, HOL bypass, and the DES mirror.
+
+The load-bearing contract is BITWISE RESUME PARITY: a request that is
+preempted mid-decode — its paged blocks swapped to host RAM, or
+discarded and recomputed (optionally through a warm prefix cache) —
+must finish with exactly the output tokens an unloaded run produces.
+The per-slot active mask makes each slot's tokens independent of its
+co-tenants, and the replay prompt re-feeds [prompt, last_prompt_tok,
+e_1..e_{j-1}] at the positions the original run used, so parity is
+exact, not approximate (DESIGN.md §Overload survival)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, ServeRequest
+from repro.sim.des import mmpp_arrivals, simulate_pool
+
+EOS = 7
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced_f32("llama3-70b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _stream(seed=42, n_req=6, max_new=12, l_in_max=40, l_in_min=3):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_req):
+        l_in = int(rng.integers(l_in_min, l_in_max))
+        reqs.append(dict(rid=rid,
+                         tokens=[int(t) for t in rng.integers(1, 900, l_in)],
+                         max_new_tokens=int(rng.integers(2, max_new))))
+    return reqs
+
+
+def _drive(eng, reqs, preempt_at=None, victim=0, mode=None, max_iters=5000):
+    """Submit everything, optionally preempting ``victim`` after
+    ``preempt_at`` steps (asserting it really was mid-decode there, so
+    the test can't silently stop exercising the preempt path)."""
+    for r in reqs:
+        eng.submit(ServeRequest(**r))
+    it = 0
+    while eng.busy() and it < max_iters:
+        eng.step()
+        it += 1
+        if preempt_at is not None and it == preempt_at:
+            assert eng.slot_req[victim] is not None \
+                and not eng.slot_prefill_left[victim], \
+                "seed-pinned victim not decoding at preempt_at; re-seed"
+            eng._test_victim_rid = eng.slot_req[victim].rid
+            eng.preempt_slot(victim, mode=mode)
+        if eng.paged:
+            eng.assert_block_invariants()
+    assert not eng.busy(), "engine did not drain"
+    return {rid: r.output_tokens for rid, r in sorted(eng.results.items())}
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_max", 3)
+    kw.setdefault("c_max", 128)
+    kw.setdefault("c_chunk", 16)
+    kw.setdefault("eos_id", EOS)
+    return InferenceEngine(cfg, params, **kw)
+
+
+# ===========================================================================
+# bitwise resume parity
+# ===========================================================================
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("decode_k", [1, 4])
+@pytest.mark.parametrize("paged", [False, True])
+def test_preempt_swap_resume_parity(engine_model, paged, decode_k, impl):
+    """Preempt a mid-decode slot, swap its KV to the host tier, resume
+    from the queue: every request's tokens must be bitwise the
+    unloaded run's — dense and paged, XLA and Pallas, K=1 and K-scan
+    (the swapped row re-enters a RUNNING scan via the dirty-tracked
+    device upload)."""
+    cfg, params = engine_model
+    reqs = _stream()
+    kw = dict(paged=paged, decode_k=decode_k, decode_impl=impl)
+    if paged:
+        kw["block_size"] = 16
+    base = _drive(_engine(cfg, params, **kw), reqs)
+    eng = _engine(cfg, params, **kw)
+    got = _drive(eng, reqs, preempt_at=6, victim=1, mode="swap")
+    assert got == base, "preempt/swap/resume changed output tokens"
+    assert eng.overload_stats["preempted"] == 1
+    assert eng.overload_stats["swapped_out"] == 1
+    assert eng.overload_stats["swapped_in"] == 1
+    assert eng.host_tier_blocks() == 0          # tier drained at idle
+    assert eng.results[eng._test_victim_rid].preemptions == 1
+
+
+def test_preempt_recompute_resume_parity(engine_model):
+    """Recompute-mode preemption (blocks discarded, prompt + emitted
+    prefix replayed through chunked prefill) is bitwise too: the
+    replay writes the same values at the same positions the original
+    run did, and the final fed token is forced to the newest emitted
+    token rather than the replay duplicate."""
+    cfg, params = engine_model
+    reqs = _stream()
+    for kw in (dict(paged=True, block_size=16),
+               dict()):                          # dense rows
+        base = _drive(_engine(cfg, params, **kw), reqs)
+        eng = _engine(cfg, params, **kw)
+        got = _drive(eng, reqs, preempt_at=6, victim=1, mode="recompute")
+        assert got == base, f"recompute parity broke ({kw})"
+        assert eng.overload_stats["recomputed"] == 1
+        assert eng.overload_stats["swapped_out"] == 0
+
+
+def test_preempt_recompute_warm_prefix_cache(engine_model):
+    """Recompute-path resume through a WARM prefix cache: the replay's
+    leading blocks hit registered prompt blocks (copy-free admission)
+    and the re-decoded suffix must still match the never-preempted
+    run bitwise."""
+    cfg, params = engine_model
+    reqs = _stream()
+    kw = dict(paged=True, block_size=16, prefix_cache=True)
+    base = _drive(_engine(cfg, params, **kw), reqs)
+    eng = _engine(cfg, params, **kw)
+    got = _drive(eng, reqs, preempt_at=6, victim=1, mode="recompute")
+    assert got == base, "warm-cache recompute parity broke"
+    assert eng.overload_stats["recomputed"] == 1
+
+
+def test_swap_threshold_selects_mode(engine_model):
+    """Default swap_threshold=0 always swaps (every preempted slot has
+    cold tokens); a huge threshold forces the recompute path."""
+    cfg, params = engine_model
+    reqs = _stream()
+    kw = dict(paged=True, block_size=16)
+    eng = _engine(cfg, params, swap_threshold=10_000, **kw)
+    _drive(eng, reqs, preempt_at=6, victim=1)     # mode=None: policy picks
+    assert eng.overload_stats["recomputed"] == 1
+    eng = _engine(cfg, params, swap_threshold=0, **kw)
+    _drive(eng, reqs, preempt_at=6, victim=1)
+    assert eng.overload_stats["swapped_out"] == 1
+
+
+# ===========================================================================
+# host tier accounting + block-pool invariants under preemption
+# ===========================================================================
+def test_host_tier_blocks_accounting(engine_model):
+    """While a slot's KV sits in the host tier, host_tier_blocks()
+    reports exactly its block count, every device-side invariant holds
+    each iteration (checked inside _drive), and the tier drains to 0
+    once the request resumes and finishes."""
+    cfg, params = engine_model
+    reqs = _stream()
+    eng = _engine(cfg, params, paged=True, block_size=16)
+    for r in reqs:
+        eng.submit(ServeRequest(**r))
+    for _ in range(6):
+        eng.step()
+    assert eng.slot_req[1] is not None and not eng.slot_prefill_left[1]
+    pos = eng.slot_pos[1]
+    eng.preempt_slot(1, mode="swap")
+    expect = -(-pos // 16) if pos % 16 else pos // 16 + 1  # incl. partial
+    assert eng.host_tier_blocks() > 0
+    assert eng.host_tier_blocks() >= pos // 16
+    assert eng.overload_stats["swapped_blocks"] == eng.host_tier_blocks()
+    assert expect >= eng.host_tier_blocks()      # never more than written
+    eng.assert_block_invariants()
+    eng.run_to_completion(5000)
+    assert eng.host_tier_blocks() == 0
+    eng.assert_block_invariants()
+
+
+def test_admission_pressure_triggers_preemption(engine_model):
+    """A block pool too small for all slots' worst-case reservations:
+    admission DEFERS, the LIFO victim policy preempts a decoding slot,
+    and every request still finishes with the ample-pool tokens."""
+    cfg, params = engine_model
+    reqs = [dict(rid=i, tokens=[int(t) for t in
+                                np.random.default_rng(i).integers(1, 900, 30)],
+                 max_new_tokens=8) for i in range(5)]
+    base = _drive(_engine(cfg, params, paged=True, block_size=16), reqs)
+    # worst case ceil((30+8)/16)=3 blocks; 3 slots * 3 = 9 > 6
+    eng = _engine(cfg, params, paged=True, block_size=16, num_blocks=6,
+                  preemption=True)
+    got = _drive(eng, reqs)
+    assert got == base
+    assert eng.overload_stats["preempted"] >= 1, \
+        "tight pool never exercised the defer->preempt path"
+    assert len(got) == len(reqs)
+
+
+# ===========================================================================
+# stability-aware admission (shedding)
+# ===========================================================================
+def test_shed_accounting(engine_model):
+    """submit() returning False, overload_stats['shed'], and
+    shed-flagged ServeResults must all agree; shed requests still get
+    a (empty-token) result so callers never hang on a missing rid."""
+    cfg, params = engine_model
+    eng = _engine(cfg, params, n_max=2, max_queue_wait=3.0)
+    rng = np.random.default_rng(0)
+    rid = shed = 0
+    for _ in range(20):
+        for _ in range(3):
+            ok = eng.submit(ServeRequest(
+                rid, [int(t) for t in rng.integers(1, 900, 12)], 8))
+            shed += 0 if ok else 1
+            rid += 1
+        for _ in range(4):
+            eng.step()
+    eng.run_to_completion(5000)
+    assert shed > 0, "overload stream never shed; tighten the knobs"
+    assert eng.overload_stats["shed"] == shed
+    assert len(eng.results) == rid
+    assert sum(1 for r in eng.results.values() if r.shed) == shed
+    served = [r for r in eng.results.values() if not r.shed]
+    assert all(r.output_tokens for r in served)
+    snap = eng.utilization_snapshot(detail=True)
+    assert snap["shed"] == shed
+    assert snap["queue_wait_est_iters"] >= 0.0
+
+
+def test_queue_wait_estimate_warmup(engine_model):
+    """No evidence -> 0.0 (never shed before the first completion);
+    once completions exist the estimate is positive with a queue and
+    bounded by queue_depth / cumulative_rate (EMA warm-up floor)."""
+    cfg, params = engine_model
+    eng = _engine(cfg, params, n_max=1)
+    for r in _stream(n_req=4, max_new=5, l_in_max=12):
+        eng.submit(ServeRequest(**r))
+    assert eng.queue_wait_estimate() == 0.0
+    while not eng.results:
+        eng.step()
+    assert len(eng.waiting) > 0
+    est = eng.queue_wait_estimate()
+    assert 0.0 < est < float("inf")
+    cum = len(eng.results) / eng.iteration
+    assert est <= len(eng.waiting) / cum + 1e-9
+
+
+def test_shed_disabled_by_default(engine_model):
+    """Without max_queue_wait the bounded-queue machinery is inert:
+    submit always accepts and nothing sheds."""
+    cfg, params = engine_model
+    eng = _engine(cfg, params, n_max=1)
+    for r in _stream(n_req=6, max_new=4, l_in_max=10):
+        assert eng.submit(ServeRequest(**r))
+    eng.run_to_completion(5000)
+    assert eng.overload_stats["shed"] == 0
+    assert all(not r.shed for r in eng.results.values())
+
+
+# ===========================================================================
+# HOL bypass
+# ===========================================================================
+def test_hol_bypass_and_starvation_guard(engine_model):
+    """An oversized-reservation head must not block a small request
+    behind it (bounded out-of-order admission), but the bypass counter
+    is capped so the head is never starved: everything completes with
+    ample-pool tokens."""
+    cfg, params = engine_model
+    rng = np.random.default_rng(2)
+    mk = lambda rid, l_in, mn: dict(                          # noqa: E731
+        rid=rid, tokens=[int(t) for t in rng.integers(1, 900, l_in)],
+        max_new_tokens=mn)
+    # slot-hog decodes for a while; "big" can't co-reside with it in a
+    # 4-block pool (3 + 3 > 4); "small" (1 block) can -> HOL bypass
+    reqs = [mk(0, 20, 24), mk(1, 30, 8), mk(2, 8, 4)]
+    base = _drive(_engine(cfg, params, n_max=2, paged=True, block_size=16),
+                  reqs)
+    eng = _engine(cfg, params, n_max=2, paged=True, block_size=16,
+                  num_blocks=4)
+    got = _drive(eng, reqs)
+    assert got == base
+    assert eng.overload_stats["hol_bypass"] >= 1, \
+        "small request never bypassed the blocked head"
+    assert len(got) == len(reqs)                 # head not starved
+    eng = _engine(cfg, params, n_max=2, paged=True, block_size=16,
+                  num_blocks=4, hol_window=0)
+    got = _drive(eng, reqs)                      # window 0 = strict FIFO
+    assert got == base
+    assert eng.overload_stats["hol_bypass"] == 0
+
+
+# ===========================================================================
+# DES mirror: stability boundary agreement
+# ===========================================================================
+def test_des_engine_stability_boundary_agreement(engine_model):
+    """The engine and the DES overload model must agree on WHERE the
+    stability boundary sits: driven by the same MMPP arrival instants
+    on the iteration clock (t_iter=1), both shed ~nothing well below
+    planned capacity and materially above it."""
+    cfg, params = engine_model
+    n_req, c_chunk, wait = 30, 16, 25.0
+    rng = np.random.default_rng(0)
+    l_in = rng.integers(8, 30, size=n_req)
+    l_out = rng.integers(3, 6, size=n_req)
+    toks = [[int(t) for t in rng.integers(1, 900, li)] for li in l_in]
+    es = float(np.mean(np.ceil(l_in / c_chunk) + l_out))
+    lam_star = 3 / es                      # n_max = 3 slots
+    for mult, low in ((0.4, True), (2.5, False)):
+        arr = np.maximum(1, np.ceil(mmpp_arrivals(
+            n_req, mult * lam_star, np.random.default_rng(7), 1.8, 40.0))
+        ).astype(np.int64)
+        eng = _engine(cfg, params, eos_id=None, max_queue_wait=wait)
+        i = 0
+        while i < n_req or eng.busy():
+            while i < n_req and arr[i] <= eng.iteration:
+                eng.submit(ServeRequest(i, toks[i], int(l_out[i])))
+                i += 1
+            eng.step()
+        st = simulate_pool(arr.astype(float), l_in.astype(float),
+                           l_out.astype(float), c_slots=3, t_iter=1.0,
+                           t_chunk=1.0, c_chunk=c_chunk, warmup=0.0,
+                           max_queue_wait=wait)
+        e_frac = eng.overload_stats["shed"] / n_req
+        d_frac = st.shed / n_req
+        if low:
+            assert e_frac <= 0.05, f"engine shed {e_frac:.0%} below capacity"
+            assert d_frac <= 0.05, f"DES shed {d_frac:.0%} below capacity"
+        else:
+            assert e_frac > 0.05, "engine did not shed past the boundary"
+            assert d_frac > 0.05, "DES did not shed past the boundary"
+
+
+def test_des_base_path_unchanged():
+    """Default-off kwargs keep simulate_pool's base path byte-identical:
+    same starts/stats with and without the new arguments present."""
+    rng = np.random.default_rng(1)
+    arr = np.sort(rng.uniform(0, 100, 200))
+    l_in = rng.integers(10, 200, 200).astype(float)
+    l_out = rng.integers(5, 50, 200).astype(float)
+    a = simulate_pool(arr, l_in, l_out, c_slots=4, t_iter=0.05,
+                      t_chunk=0.01, c_chunk=64, warmup=10.0)
+    b = simulate_pool(arr, l_in, l_out, c_slots=4, t_iter=0.05,
+                      t_chunk=0.01, c_chunk=64, warmup=10.0,
+                      max_queue_wait=None, preempt=False, swap_s=5.0)
+    assert a.served == b.served and a.shed == b.shed == 0
+    assert np.array_equal(a.waits, b.waits)
+    assert np.array_equal(a.ttfts, b.ttfts)
+    assert a.busy_time == b.busy_time
+    assert a.goodput_frac == 1.0
+
+
+def test_des_preemption_conserves_requests():
+    """The DES overload branch never loses requests: served + shed ==
+    offered, preempted requests finish (swap penalty only), and
+    goodput_frac reflects the shed count."""
+    rng = np.random.default_rng(3)
+    n = 300
+    arr = np.sort(rng.uniform(0, 60, n))          # heavy overload
+    l_in = rng.integers(10, 100, n).astype(float)
+    l_out = rng.integers(5, 20, n).astype(float)
+    st = simulate_pool(arr, l_in, l_out, c_slots=4, t_iter=0.05,
+                       t_chunk=0.01, c_chunk=64, warmup=0.0,
+                       max_queue_wait=2.0, preempt=True, swap_s=0.1)
+    assert st.served + st.shed == n
+    assert st.shed > 0 and st.preempted > 0
+    assert 0.0 < st.goodput_frac < 1.0
+    assert len(st.ttfts) == st.served
+
+
+# ===========================================================================
+# fleet plumbing
+# ===========================================================================
+def test_fleet_gateway_surfaces_shed_and_preemptions(engine_model):
+    """FleetRuntime forwards the overload knobs to every engine and the
+    gateway responses carry the shed flag / preemption count."""
+    from repro.serving.pools import FleetRuntime, GatewayRequest
+    cfg, params = engine_model
+    rt = FleetRuntime(cfg, params, boundaries=(64,), gammas=(1.5,),
+                      n_maxes=(1, 1), c_maxes=(64, 128), c_chunk=16,
+                      paged=True, kv_block_size=16,
+                      preemption=True, max_queue_wait=2.0)
+    for eng in rt.engines.values():
+        assert eng.preemption and eng.max_queue_wait == 2.0
+    rng = np.random.default_rng(0)
+    rid = 0
+    for burst in range(8):
+        for _ in range(3):
+            text = "".join(chr(97 + int(c)) for c in rng.integers(0, 26, 40))
+            rt.submit(GatewayRequest(rid, text, 6))
+            rid += 1
+        for eng in rt.engines.values():
+            for _ in range(2):
+                if eng.busy():
+                    eng.step()
+    out = rt.run(max_iters=5000)
+    assert len(out) == rid
+    shed = [r for r in out.values() if r.shed]
+    served = [r for r in out.values() if not r.shed]
+    assert shed, "gateway stream never shed"
+    assert all(not r.output_tokens for r in shed)
+    assert all(r.output_tokens for r in served)
+    assert all(r.preemptions >= 0 for r in out.values())
+
+
+# ===========================================================================
+# sharded engines (CI multi-device job runs `-k sharded`)
+# ===========================================================================
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@multi_device
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_sharded_preempt_resume_parity(engine_model, mode):
+    """Preempt/swap/resume on a tp=4 mesh engine: the host tier holds
+    the UNSHARDED gather (device_get of the sharded pages), swap-in
+    re-pins the pool onto the mesh sharding, and tokens stay bitwise
+    the 1-device unpreempted run's."""
+    from repro.launch.mesh import make_smoke_mesh, make_submeshes
+    cfg, params = engine_model
+    mesh = make_submeshes(make_smoke_mesh(), 4)[0]
+    reqs = _stream()
+    kw = dict(paged=True, block_size=16)
+    base = _drive(_engine(cfg, params, **kw), reqs)
+    eng = _engine(cfg, params, mesh=mesh, **kw)
+    got = _drive(eng, reqs, preempt_at=6, victim=1, mode=mode)
+    assert got == base, f"sharded {mode} preemption diverged"
+    assert eng.overload_stats["preempted"] == 1
+    assert eng.tp_degree == 4
