@@ -131,29 +131,26 @@ class GatewayRouter:
                  compressor: Optional[ExtractiveCompressor] = None,
                  p_c: float = 1.0, seed: int = 0,
                  boundaries: Optional[Sequence[int]] = None,
-                 gammas: Optional[Sequence[float]] = None):
+                 gammas: Optional[Sequence[float]] = None,
+                 lout_predictor=None):
         if boundaries is None:
             if b_short is None:
                 raise ValueError("pass b_short (two-pool) or boundaries")
             boundaries = (b_short,)
-        boundaries = tuple(int(b) for b in boundaries)
-        if list(boundaries) != sorted(set(boundaries)):
-            raise ValueError(f"boundaries must be strictly increasing, "
-                             f"got {boundaries}")
-        if gammas is None:
-            gammas = (gamma,) * len(boundaries)
-        if len(gammas) != len(boundaries):
-            raise ValueError("need one gamma per boundary")
-        self.boundaries = tuple(boundaries)
-        self.gammas = tuple(gammas)
-        self.k = len(self.boundaries) + 1
+        self._set_bands(boundaries, gammas if gammas is not None
+                        else (gamma,) * len(boundaries))
         self.names = pool_names(self.k)
-        # legacy two-pool views (first boundary); a boundary-less router
-        # (K=1, homogeneous) routes everything to its single pool
-        self.b_short = self.boundaries[0] if self.boundaries else 0
-        self.gamma = self.gammas[0] if self.gammas else 1.0
         self.compressor = compressor or ExtractiveCompressor()
         self.ema = BytesPerTokenEMA()
+        # output-length-aware routing (DESIGN.md §Serving API): with a
+        # calibrated OutputLenPredictor, banding uses the PREDICTED
+        # output length instead of the max_tokens worst case — callers
+        # over-claiming max_tokens stop being routed (and compressed)
+        # as if they would use it. The serving runtime restores no-OOM
+        # by clamping the generation budget to the chosen pool's
+        # context (token-budget routing); None keeps worst-case
+        # routing, bitwise-identical to the legacy router.
+        self.lout_predictor = lout_predictor
         self.stats = RouterStats()
         # session -> pool index of its last turn (prefix-affinity hint)
         self._session_pool: Dict[str, int] = {}
@@ -161,15 +158,55 @@ class GatewayRouter:
         self._p_c = p_c
         self._rng = np.random.default_rng(seed)
 
+    def _set_bands(self, boundaries, gammas) -> None:
+        boundaries = tuple(int(b) for b in boundaries)
+        if list(boundaries) != sorted(set(boundaries)):
+            raise ValueError(f"boundaries must be strictly increasing, "
+                             f"got {boundaries}")
+        gammas = tuple(float(g) for g in gammas)
+        if len(gammas) != len(boundaries):
+            raise ValueError("need one gamma per boundary")
+        if any(g < 1.0 for g in gammas):
+            raise ValueError(f"gammas must be >= 1.0, got {gammas}")
+        self.boundaries = boundaries
+        self.gammas = gammas
+        self.k = len(self.boundaries) + 1
+        # legacy two-pool views (first boundary); a boundary-less router
+        # (K=1, homogeneous) routes everything to its single pool
+        self.b_short = self.boundaries[0] if self.boundaries else 0
+        self.gamma = self.gammas[0] if self.gammas else 1.0
+
+    def set_boundaries(self, boundaries: Sequence[int],
+                       gammas: Optional[Sequence[float]] = None) -> None:
+        """Apply a re-plan to the LIVE router (DESIGN.md §Serving API):
+        boundary/gamma moves are software-only in the C&R design — the
+        band edges move, the provisioned pool handles do not, so K must
+        stay the same. Stats, the bytes/token EMA and session affinity
+        survive the move; in-flight requests keep the pool they were
+        routed to (the no-OOM guarantee was enforced against their
+        admission-time pool)."""
+        if len(boundaries) != len(self.boundaries):
+            raise ValueError(
+                f"re-plan changed pool count ({len(boundaries) + 1} != "
+                f"{self.k}): resizing the fleet needs provisioning, not "
+                "a boundary move")
+        self._set_bands(boundaries,
+                        gammas if gammas is not None else self.gammas)
+
     # -- token budget estimate (paper §2.1) --------------------------------
     def estimate_l_total(self, req: Request) -> int:
         """Estimated token budget L_hat = prompt_bytes / c_hat + L_out
         (tokens); falls back to the exact ``l_in`` when the request
-        carries no raw bytes (DES path)."""
+        carries no raw bytes (DES path). With an OutputLenPredictor the
+        L_out term is min(cap, predicted) instead of the cap."""
         c_hat = self.ema.get(req.category)
         prompt_tokens = math.ceil(req.prompt_bytes / c_hat) \
             if req.prompt_bytes else req.l_in
-        return prompt_tokens + req.l_out   # l_out == r.max_output_tokens
+        l_out = req.l_out              # l_out == r.max_output_tokens
+        if self.lout_predictor is not None:
+            l_out = min(l_out, self.lout_predictor.predict(
+                prompt_tokens, category=req.category))
+        return prompt_tokens + l_out
 
     # -- main entry ---------------------------------------------------------
     def route(self, req: Request, prompt_text: Optional[str] = None,

@@ -66,6 +66,79 @@ class Request:
     prompt_bytes: int = 0  # raw prompt size (router estimates tokens from it)
 
 
+class OutputLenPredictor:
+    """Per-request output-length prediction from the calibrated power
+    law (benchmarks/calibrate_lout.py): L_out = clip(a * L_total^q * eps)
+    with lognormal(sigma) noise eps.
+
+    Serving uses this two ways (DESIGN.md §Serving API): the router
+    bands by min(cap, prediction) instead of the max_tokens worst case
+    (``lout_routing``), and paged admission reserves the predicted KV
+    footprint (``lout_reservation``).  Because the model is quantile-
+    parameterized, the reservation is an upper quantile (default p90)
+    of the noise — a deliberate over-prediction so breaches (requests
+    outrunning their reserved blocks) stay rare; the engine's
+    preemption path absorbs the tail.
+
+    The power law gives L_out in terms of TOTAL length, which is
+    itself L_in + L_out — resolved by a short clipped fixed-point
+    sweep.  An online per-category bias EMA (observed/model ratio from
+    completed requests) corrects calibration drift live.
+    """
+
+    def __init__(self, a: float, q: float, sigma: float,
+                 lo: int, hi: int, quantile: float = 0.9,
+                 decay: float = 0.95):
+        import statistics
+        self.a, self.q, self.sigma = float(a), float(q), float(sigma)
+        self.lo, self.hi = int(lo), int(hi)
+        self.quantile = float(quantile)
+        self.decay = float(decay)
+        self._z = statistics.NormalDist().inv_cdf(self.quantile)
+        self._bias: Dict[Optional[str], float] = {}
+
+    @classmethod
+    def from_workload(cls, w: "Workload",
+                      quantile: float = 0.9) -> "OutputLenPredictor":
+        return cls(w.lout_a, w.lout_q, w.lout_sigma,
+                   w.lout_min, w.lout_max, quantile=quantile)
+
+    def _median(self, l_in: float) -> float:
+        """Median-model L_out at prompt length ``l_in``: fixed point of
+        x = clip(a * (l_in + x)^q) — the in-loop clip bounds the sweep
+        for superlinear q, and two iterations land within a token for
+        the calibrated (a, q) ranges."""
+        out = self.a * max(2.0, float(l_in)) ** self.q
+        for _ in range(3):
+            out = min(max(self.a * (l_in + out) ** self.q, self.lo),
+                      self.hi)
+        return out
+
+    def predict(self, l_in: int, category: Optional[str] = None,
+                cap: Optional[int] = None) -> int:
+        """Predicted output tokens for a prompt of ``l_in`` tokens: the
+        noise quantile times the median model times the category's
+        learned bias, clipped to the model range and ``cap``."""
+        pred = self._median(l_in) * np.exp(self._z * self.sigma) \
+            * self._bias.get(category, 1.0)
+        pred = int(min(max(pred, self.lo), self.hi))
+        if cap is not None:
+            pred = min(pred, int(cap))
+        return max(1, pred)
+
+    def update(self, l_in: int, observed_l_out: int,
+               category: Optional[str] = None) -> None:
+        """Fold one completed request's actual output length into the
+        per-category bias EMA (ratio against the MEDIAN model, so the
+        quantile safety margin stays a margin)."""
+        med = self._median(l_in)
+        if med <= 0 or observed_l_out <= 0:
+            return
+        cur = self._bias.get(category, 1.0)
+        self._bias[category] = self.decay * cur \
+            + (1.0 - self.decay) * (observed_l_out / med)
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     name: str

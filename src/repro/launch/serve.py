@@ -10,6 +10,16 @@ and spins up one gateway-routed engine per pool.
   # plan a 3-pool azure fleet and serve a mixed prompt batch through it
   PYTHONPATH=src python -m repro.launch.serve --fleet 3 --workload azure \
       --reduced --new-tokens 8
+
+  # same fleet behind the asyncio HTTP gateway (OpenAI-compatible
+  # /v1/completions with SSE streaming, /health, Prometheus /metrics,
+  # closed-loop re-planner on /admin/replan)
+  PYTHONPATH=src python -m repro.launch.serve --fleet 2 --reduced \
+      --decode-k 4 --http 8000
+
+  # CI smoke: ephemeral port, in-process client, exit nonzero on failure
+  PYTHONPATH=src python -m repro.launch.serve --fleet 2 --reduced \
+      --decode-k 4 --smoke
 """
 import argparse
 import dataclasses
@@ -24,14 +34,16 @@ from repro.distributed.context import make_context
 from repro.models import model as M
 
 
-def serve_fleet(args) -> None:
-    """Plan K pools from the workload CDF, then make the plan
+def build_fleet_runtime(args):
+    """Plan K pools from the workload CDF and make the plan
     executable: one InferenceEngine per pool behind the C&R gateway
     (serving/pools.py), boundaries scaled down to the reduced model's
-    cache so the demo runs on CPU in seconds."""
+    cache so the demo runs on CPU in seconds. All serving knobs travel
+    as ONE ServingConfig (DESIGN.md §Serving API)."""
     from repro.core.planner import plan_k_pool
     from repro.core.workload import get_workload
-    from repro.serving.pools import FleetRuntime, GatewayRequest
+    from repro.serving.config import ServingConfig
+    from repro.serving.pools import FleetRuntime
 
     w = get_workload(args.workload)
     plan = plan_k_pool(w, lam=args.lam, t_slo=0.5, k=args.fleet)
@@ -56,18 +68,24 @@ def serve_fleet(args) -> None:
             mesh = jax.make_mesh((d, m), ("data", "model"))
         else:
             mesh = make_smoke_mesh()
+    scfg = ServingConfig(
+        paged=args.paged or args.prefix_cache or args.preemption,
+        prefix_cache=args.prefix_cache, decode_k=args.decode_k,
+        spec_k=args.spec_k, mesh=mesh, tp_degree=args.tp,
+        preemption=args.preemption, max_queue_wait=args.max_queue_wait)
     # scale datacenter-token boundaries onto the demo model's cache
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
                                 ctx_scale=512 / plan.pools[-1].c_max,
-                                paged=args.paged or args.prefix_cache
-                                or args.preemption,
-                                prefix_cache=args.prefix_cache,
-                                decode_k=args.decode_k,
-                                spec_k=args.spec_k,
-                                mesh=mesh, tp_degree=args.tp,
-                                preemption=args.preemption,
-                                max_queue_wait=args.max_queue_wait)
+                                config=scfg)
+    return rt, plan
+
+
+def serve_fleet(args) -> None:
+    """Offline fleet demo: plan, route a mixed prompt batch, drain."""
+    from repro.serving.pools import GatewayRequest
+
+    rt, plan = build_fleet_runtime(args)
     bounds = rt.router.boundaries
     print(f"runtime pools: boundaries={bounds} "
           f"gammas={rt.router.gammas} "
@@ -159,6 +177,182 @@ def serve_fleet(args) -> None:
                   f"mu={snap['service_rate_per_iter']:.3f}/it")
 
 
+async def _http_call(host, port, method, path, body=None):
+    """Minimal raw HTTP/1.1 client (stdlib only) for the in-process
+    smoke: returns (status, header dict, body bytes). The gateway
+    always closes the connection, so read-to-EOF is the framing."""
+    import asyncio
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = body if body is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: smoke\r\n"
+                 f"Content-Length: {len(payload)}\r\n\r\n"
+                 .encode() + payload)
+    await writer.drain()
+    raw = await asyncio.wait_for(reader.read(), timeout=120.0)
+    writer.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {}
+    for ln in lines[1:]:
+        if ":" in ln:
+            k, v = ln.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    return status, headers, rest
+
+
+def _parse_sse(body: bytes):
+    """data: events -> (list of JSON chunks, saw [DONE])."""
+    import json
+    chunks, done = [], False
+    for ev in body.split(b"\n\n"):
+        if not ev.startswith(b"data: "):
+            continue
+        if ev == b"data: [DONE]":
+            done = True
+        else:
+            chunks.append(json.loads(ev[6:]))
+    return chunks, done
+
+
+async def _smoke_client(gw) -> None:
+    """Exercise every endpoint against a live gateway and assert the
+    PR's acceptance behaviors: >1 SSE flush, streamed == offline token
+    ids, parsable Prometheus text with per-pool series, a forced
+    re-plan tick that moves the live boundary on short-shifted
+    traffic, structured 4xx."""
+    import json
+    import re
+    host, port = gw.host, gw.port
+    prompt = "smoke fleet serving demo " * 6
+
+    status, _, body = await _http_call(host, port, "GET", "/health")
+    h = json.loads(body)
+    assert status == 200 and h["status"] == "ok", (status, h)
+    print(f"smoke /health ok: pools={list(h['pools'])} "
+          f"boundaries={h['boundaries']}")
+
+    req = json.dumps({"prompt": prompt, "max_tokens": 12,
+                      "stream": True}).encode()
+    status, headers, body = await _http_call(host, port, "POST",
+                                             "/v1/completions", req)
+    assert status == 200, body[:200]
+    assert headers.get("content-type") == "text/event-stream", headers
+    chunks, done = _parse_sse(body)
+    token_chunks = [c for c in chunks
+                    if c["choices"][0]["finish_reason"] is None]
+    streamed = [t for c in token_chunks
+                for t in c["choices"][0]["token_ids"]]
+    assert done and len(token_chunks) > 1, \
+        f"want >1 flush + [DONE], got {len(token_chunks)} flushes"
+    assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+    print(f"smoke SSE ok: {len(token_chunks)} flushes / "
+          f"{len(streamed)} tokens from pool "
+          f"{chunks[-1]['fleetopt']['pool']}")
+
+    # same prompt through the non-streaming path: decode is
+    # deterministic argmax, so the ids must match bitwise
+    req = json.dumps({"prompt": prompt, "max_tokens": 12}).encode()
+    status, _, body = await _http_call(host, port, "POST",
+                                       "/v1/completions", req)
+    offline = json.loads(body)["choices"][0]["token_ids"]
+    assert status == 200 and offline == streamed, (streamed, offline)
+    print("smoke parity ok: streamed ids == offline drain ids")
+
+    status, _, body = await _http_call(host, port, "POST",
+                                       "/v1/completions", b"{not json")
+    err = json.loads(body)
+    assert status == 400 and err["error"]["type"] \
+        == "invalid_request_error", (status, err)
+
+    # a short-prompt burst so the re-planner's window is clearly
+    # short-shifted relative to the provisioned boundaries
+    for i in range(6):
+        req = json.dumps({"prompt": f"short {i} " * 3,
+                          "max_tokens": 8}).encode()
+        status, _, _ = await _http_call(host, port, "POST",
+                                        "/v1/completions", req)
+        assert status == 200
+    b_before = list(gw.runtime.router.boundaries)
+    status, _, body = await _http_call(host, port, "POST",
+                                       "/admin/replan")
+    rep = json.loads(body)
+    assert status == 200 and rep["tick"] >= 1, rep
+    assert rep["applied"], f"re-plan did not move boundaries: {rep}"
+    b_after = list(gw.runtime.router.boundaries)
+    assert b_after == rep["boundaries_after"]
+    assert all(a <= b for a, b in zip(b_after, b_before)), \
+        (b_before, b_after)
+    print(f"smoke re-plan ok: boundaries {b_before} -> {b_after} "
+          f"(reason: {rep['reason']})")
+
+    status, _, body = await _http_call(host, port, "GET", "/metrics")
+    text = body.decode()
+    assert status == 200
+    sample_re = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? -?[0-9eE+.in-]+$')
+    for line in text.splitlines():
+        if line and not line.startswith("#"):
+            assert sample_re.match(line), f"bad metric line: {line!r}"
+    for needle in ('fleetopt_dispatches_total{pool="short"}',
+                   'fleetopt_boundary_tokens{index="0"}',
+                   "fleetopt_replan_applied_total",
+                   "fleetopt_stream_flushes_total"):
+        assert needle in text, f"missing metric {needle}"
+    gauge = float([ln for ln in text.splitlines()
+                   if ln.startswith('fleetopt_boundary_tokens{index="0"}')
+                   ][0].split()[-1])
+    assert int(gauge) == b_after[0], (gauge, b_after)
+    print("smoke /metrics ok: Prometheus text parses, boundary gauge "
+          "tracks the applied re-plan")
+
+
+def serve_http(args) -> None:
+    """Run the asyncio gateway over a planned fleet: ``--http PORT``
+    serves until killed; ``--smoke`` binds an ephemeral port, runs the
+    in-process client against it and exits nonzero on any failure."""
+    import asyncio
+
+    from repro.serving.replanner import Replanner
+    from repro.serving.server import ServingGateway
+
+    rt, plan = build_fleet_runtime(args)
+    print(f"runtime pools: boundaries={rt.router.boundaries} "
+          f"gammas={rt.router.gammas} "
+          f"contexts={[e.c_max for e in rt.engines.values()]}")
+    rp = Replanner(rt, min_observed=4, n_samples=2048)
+    gw = ServingGateway(rt, replanner=rp, port=0 if args.smoke
+                        else args.http,
+                        replan_interval_s=args.replan_interval)
+
+    async def smoke():
+        await gw.start()
+        print(f"smoke gateway on {gw.host}:{gw.port}")
+        try:
+            await _smoke_client(gw)
+        finally:
+            await gw.stop()
+
+    async def forever():
+        await gw.start()
+        print(f"gateway listening on http://{gw.host}:{gw.port} "
+              f"(POST /v1/completions, GET /health, GET /metrics, "
+              f"POST /admin/replan)")
+        assert gw._server is not None
+        async with gw._server:
+            await gw._server.serve_forever()
+
+    if args.smoke:
+        t0 = time.time()
+        asyncio.run(smoke())
+        print(f"serve smoke passed in {time.time() - t0:.1f}s")
+        return
+    try:
+        asyncio.run(forever())
+    except KeyboardInterrupt:
+        pass
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minitron-8b")
@@ -215,10 +409,28 @@ def main():
                          "the ref-counted prefix cache (implies --paged) "
                          "and demo a two-turn session with gateway "
                          "affinity")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the --fleet runtime over the asyncio "
+                         "HTTP gateway (OpenAI-compatible "
+                         "/v1/completions with SSE streaming, /health, "
+                         "Prometheus /metrics, /admin/replan) instead "
+                         "of the offline demo batch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --fleet: bind an ephemeral port, run the "
+                         "in-process smoke client against every "
+                         "endpoint (streaming parity, metrics parse, "
+                         "forced re-plan) and exit nonzero on failure")
+    ap.add_argument("--replan-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="run a re-planner tick every S seconds "
+                         "(--http mode; /admin/replan always works)")
     args = ap.parse_args()
 
     if args.fleet:
-        serve_fleet(args)
+        if args.http is not None or args.smoke:
+            serve_http(args)
+        else:
+            serve_fleet(args)
         return
 
     cfg = get_config(args.arch)

@@ -1,0 +1,30 @@
+"""Serving stack: engines, gateway runtime, HTTP front end
+(DESIGN.md §Serving API). The public surface below is the supported
+import path; everything else in the subpackage is internal."""
+from repro.serving.config import ServingConfig
+from repro.serving.engine import InferenceEngine, ServeRequest, ServeResult
+from repro.serving.metrics import (Metric, fleet_metrics,
+                                   render_prometheus)
+from repro.serving.pools import (FleetRuntime, GatewayRequest,
+                                 GatewayResponse, TwoPoolRuntime)
+from repro.serving.replanner import Replanner
+from repro.serving.server import RequestError, ServingGateway
+from repro.serving.tokenizer import ByteChunkTokenizer
+
+__all__ = [
+    "ByteChunkTokenizer",
+    "FleetRuntime",
+    "GatewayRequest",
+    "GatewayResponse",
+    "InferenceEngine",
+    "Metric",
+    "Replanner",
+    "RequestError",
+    "ServeRequest",
+    "ServeResult",
+    "ServingConfig",
+    "ServingGateway",
+    "TwoPoolRuntime",
+    "fleet_metrics",
+    "render_prometheus",
+]

@@ -114,12 +114,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
-from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.distributed import sharding as SH
 from repro.models import layers as L
-from repro.distributed.context import ParallelContext, make_context
+from repro.distributed.context import make_context
 from repro.models import model as M
-from repro.serving.draft import DEFAULT_NGRAM as DEFAULT_SPEC_NGRAM
+from repro.serving.config import ServingConfig
 from repro.serving.draft import propose_draft
 
 
@@ -143,6 +142,13 @@ class ServeRequest:
     tokens: List[int]              # prompt token ids
     max_new_tokens: int
     category: str = "prose"
+    # predicted output length (tokens), from the gateway's calibrated
+    # L_out model. With ``lout_reservation`` on, paged admission
+    # reserves ceil((L_in + hint)/block) blocks instead of the
+    # max_new_tokens worst case; a request that outruns its hint
+    # triggers a reservation-breach preemption (never an OOM). None =
+    # worst-case reservation (the bitwise-default path).
+    l_out_hint: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -179,17 +185,36 @@ class InferenceEngine:
     """One pool: n_max lockstep slots over a shared batched KV cache."""
 
     def __init__(self, cfg: ModelConfig, params, n_max: int, c_max: int,
-                 c_chunk: int = 512, eos_id: Optional[int] = None,
-                 decode_impl: str = "xla", paged: bool = False,
-                 block_size: int = DEFAULT_KV_BLOCK,
-                 num_blocks: Optional[int] = None,
-                 prefix_cache: bool = False, decode_k: int = 1,
-                 spec_k: int = 1, spec_ngram: int = DEFAULT_SPEC_NGRAM,
-                 mesh=None, parallel: Optional[ParallelContext] = None,
-                 preemption: bool = False,
-                 max_queue_wait: Optional[float] = None,
-                 swap_threshold: Optional[int] = None,
-                 hol_window: int = 2):
+                 c_chunk: Optional[int] = None, *,
+                 config: Optional[ServingConfig] = None, **overrides):
+        # -- ServingConfig shim (DESIGN.md §Serving API) -------------------
+        # One validated config object replaces the legacy 16-kwarg
+        # sprawl; explicit kwargs (including positional c_chunk) fold
+        # into it via replace(), so kwargs-vs-config construction is
+        # bitwise-identical (test-pinned). Unknown kwargs fail fast in
+        # ServingConfig.replace with the valid option list.
+        scfg = config if config is not None else ServingConfig()
+        if c_chunk is not None:
+            overrides = dict(overrides, c_chunk=c_chunk)
+        if overrides:
+            scfg = scfg.replace(**overrides)
+        self.config = scfg
+        c_chunk = scfg.c_chunk
+        eos_id = scfg.eos_id
+        decode_impl = scfg.decode_impl
+        paged = scfg.paged
+        block_size = scfg.block_size
+        num_blocks = scfg.num_blocks
+        prefix_cache = scfg.prefix_cache
+        decode_k = scfg.decode_k
+        spec_k = scfg.spec_k
+        spec_ngram = scfg.spec_ngram
+        mesh = scfg.mesh
+        parallel = scfg.parallel
+        preemption = scfg.preemption
+        max_queue_wait = scfg.max_queue_wait
+        swap_threshold = scfg.swap_threshold
+        hol_window = scfg.hol_window
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 "engine supports attention-family models (the paper serves "
@@ -342,7 +367,14 @@ class InferenceEngine:
         self.overload_stats = {"preempted": 0, "swapped_out": 0,
                                "swapped_in": 0, "recomputed": 0,
                                "swapped_blocks": 0, "shed": 0,
-                               "hol_bypass": 0}
+                               "hol_bypass": 0, "reservation_breach": 0}
+        # -- output-length-aware reservation (DESIGN.md §Serving API) ------
+        # opt-in: paged admission reserves the request's PREDICTED
+        # footprint (l_out_hint) instead of its max_new_tokens worst
+        # case, multiplying admission capacity when callers over-claim
+        # max_tokens; preemption is the safety net when a prediction
+        # runs short (see _reservation_breach)
+        self.lout_reservation = bool(scfg.lout_reservation)
         # rolling arrival/service-rate estimate (EMA per iteration) for
         # the stability-aware admission bound (Little's-law style)
         self._completed_total = 0
@@ -694,7 +726,10 @@ class InferenceEngine:
         occupied = sum(r is not None for r in self.slot_req)
         if self.paged:
             for s, chunk in chunks.items():
-                self._ensure_blocks(s, int(self.slot_pos[s]) + len(chunk))
+                ok = self._ensure_blocks(s,
+                                         int(self.slot_pos[s]) + len(chunk))
+                assert ok, "prefill outran its reservation (the prompt " \
+                    "is always fully covered, hint or not)"
             if decode_mask.any():
                 # max tokens one decode-only dispatch can emit per row:
                 # decode_k micro-iterations x up to spec_k tokens each
@@ -704,11 +739,27 @@ class InferenceEngine:
                 # what keeps the scan from ever re-entering the host
                 # allocator mid-dispatch.
                 k = self.decode_k * self.spec_k if not chunks else 1
+                breached = False
                 for s in np.where(decode_mask)[0]:
-                    req = self.slot_req[s]
+                    req = self.slot_req[int(s)]
+                    if req is None:     # preempted by an earlier breach
+                        continue
                     left = req.max_new_tokens - len(self.slot_out[int(s)])
-                    self._ensure_blocks(
-                        int(s), int(self.slot_pos[s]) + min(k, left))
+                    needed = int(self.slot_pos[s]) + min(k, left)
+                    if not self._ensure_blocks(int(s), needed):
+                        # tightened (l_out_hint) reservation outrun:
+                        # free blocks by preemption — possibly of this
+                        # very slot — and keep the dispatch going
+                        self._reservation_breach(int(s), needed,
+                                                 protected=chunks.keys())
+                        breached = True
+                if breached:
+                    # breach preemptions may have emptied slots the
+                    # mask was computed over (victims, or the breacher
+                    # itself) — only still-occupied rows decode; an
+                    # all-False mask falls through to the idle branch
+                    decode_mask &= np.array(
+                        [r is not None for r in self.slot_req], bool)
         if chunks and decode_mask.any():
             self._occ_slot_iters += occupied
             self._run_mixed(chunks, decode_mask)
@@ -883,13 +934,27 @@ class InferenceEngine:
             else:
                 hashes = []
             hits = self._prefix_hits(hashes)
+            # output-length-aware reservation (lout_reservation): a
+            # FRESH admission reserves its predicted footprint
+            # (l_out_hint, floored at one decode token) instead of the
+            # max_new_tokens worst case — the oversized/never-coverable
+            # refusals above stay on the true worst case. Resumed
+            # preemptees always reserve the full worst case: a request
+            # that already breached once must not ping-pong.
+            plan = worst
+            if (self.lout_reservation and state is None
+                    and req.l_out_hint is not None):
+                reserve_budget = min(budget_left,
+                                     max(1, int(req.l_out_hint)))
+                plan = math.ceil((len(tokens_full) + reserve_budget)
+                                 / self.block_size)
             # cached leading blocks are reused, not allocated: only the
             # cold suffix needs worst-case coverage. BUT pinning an
             # EVICTABLE hit (ref 0, cached-free) removes it from the
             # allocatable tiers without adding to _reserved, so it must
             # be charged here too or earlier slots' outstanding
             # reservations get over-committed and the allocator runs dry.
-            need = worst - hits
+            need = max(0, plan - hits)
             evictable_hits = sum(
                 1 for i in range(hits)
                 if self._ref[self._prefix_map[hashes[i]]] == 0)
@@ -964,14 +1029,17 @@ class InferenceEngine:
         return False
 
     # -- preemption + host-offload KV tier (DESIGN.md §Overload survival) --
-    def _select_victim(self) -> Optional[int]:
+    def _select_victim(self, exclude=()) -> Optional[int]:
         """LIFO victim policy: the most recently admitted DECODING slot
         (mid-prefill slots have not finished paying their admission
         cost), ties broken by the largest remaining worst-case
-        reservation — the victim that frees the most future blocks."""
+        reservation — the victim that frees the most future blocks.
+        ``exclude`` shields slots the caller must not preempt (the
+        reservation-breach path: the slot being grown, plus slots whose
+        prefill chunk was already collected for this dispatch)."""
         cands = [s for s in range(self.n_max)
                  if self.slot_req[s] is not None
-                 and not self.slot_prefill_left[s]]
+                 and not self.slot_prefill_left[s] and s not in exclude]
         if not cands:
             return None
         return max(cands, key=lambda s: (self._slot_admit_iter[s],
@@ -1120,23 +1188,61 @@ class InferenceEngine:
         self.overload_stats["swapped_in"] += 1
         return "admitted"
 
-    def _ensure_blocks(self, s: int, tokens_needed: int) -> None:
+    def _ensure_blocks(self, s: int, tokens_needed: int) -> bool:
         """Allocate physical blocks for slot ``s`` until it covers
-        ``tokens_needed`` positions. Admission reserved the worst case
-        (net of prefix-cache hits), so the allocatable tiers can never
-        run dry here (asserted)."""
+        ``tokens_needed`` positions. Within the slot's admission-time
+        reservation the allocatable tiers can never run dry (asserted).
+        BEYOND it — only possible under the tightened lout_reservation
+        — an allocation may take only the headroom no other slot has
+        reserved; returns False (nothing allocated for the breaching
+        token) when that headroom is gone, and the caller must free
+        blocks via _reservation_breach. Always True on the worst-case
+        reservation path."""
         blocks = self._slot_blocks[s]
         while len(blocks) * self.block_size < tokens_needed:
-            assert self._free or self._cached_free, \
-                "allocator exhausted despite reservation"
+            if self._slot_reserved[s] > 0:
+                assert self._free or self._cached_free, \
+                    "allocator exhausted despite reservation"
+                self._reserved -= 1
+                self._slot_reserved[s] -= 1
+            elif self._available_blocks() - self._reserved <= 0:
+                # other slots' outstanding reservations own every
+                # remaining block — taking one would break their
+                # never-runs-dry guarantee
+                return False
             phys = self._alloc_block()
             self._ref[phys] = 1
-            self._reserved -= 1
-            self._slot_reserved[s] -= 1
             self.block_tables[s, len(blocks)] = phys
             blocks.append(phys)
             self.prefix_stats["allocated_blocks"] += 1
             self._bt_device = None
+        return True
+
+    def _reservation_breach(self, s: int, tokens_needed: int,
+                            protected=frozenset()) -> None:
+        """Slot ``s`` outran its tightened (l_out_hint) reservation and
+        the pool has no unreserved headroom: preempt LIFO victims until
+        the allocation fits, or — when ``s`` is the only preemptable
+        slot left — preempt ``s`` itself (it resumes with a FULL
+        worst-case reservation, so a request breaches at most once).
+        Never an OOM: the dense worst-case guarantee degrades to a
+        preemption, exactly the safety net lout_reservation=True
+        contracts for (requires preemption=True, config-validated).
+        ``protected`` slots (this dispatch's collected prefill chunks)
+        are never victims — their pending chunk would write into a
+        released slot."""
+        assert self.lout_reservation and self.preemption, \
+            "reservation breach outside lout_reservation mode"
+        self.overload_stats["reservation_breach"] += 1
+        shield = {s} | set(protected)
+        while True:
+            victim = self._select_victim(exclude=shield)
+            if victim is None:
+                self.preempt_slot(s, requeue_index=0)
+                return
+            self.preempt_slot(victim, requeue_index=0)
+            if self._ensure_blocks(s, tokens_needed):
+                return
 
     def _block_table_device(self):
         """Device block table, re-uploaded only after allocator writes

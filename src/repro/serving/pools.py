@@ -22,9 +22,9 @@ from repro.configs.base import ModelConfig
 from repro.core.compression import ExtractiveCompressor
 from repro.core.naming import pool_names
 from repro.core.planner import FleetPlan
-from repro.core.profiles import DEFAULT_KV_BLOCK
 from repro.core.router import GatewayRouter, RoutingDecision
-from repro.core.workload import Request
+from repro.core.workload import OutputLenPredictor, Request, get_workload
+from repro.serving.config import ServingConfig
 from repro.serving.engine import InferenceEngine, ServeRequest, ServeResult
 from repro.serving.tokenizer import ByteChunkTokenizer
 
@@ -67,13 +67,23 @@ class FleetRuntime:
     def __init__(self, cfg: ModelConfig, params,
                  boundaries: Sequence[int], gammas: Sequence[float],
                  n_maxes: Sequence[int], c_maxes: Sequence[int],
-                 c_chunk: int = 512, paged: bool = False,
-                 kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False, decode_k: int = 1,
-                 spec_k: int = 1, mesh=None, tp_degree: int = 1,
-                 preemption: bool = False,
-                 max_queue_wait: Optional[float] = None,
-                 swap_threshold: Optional[int] = None):
+                 c_chunk: Optional[int] = None, *,
+                 config: Optional[ServingConfig] = None,
+                 lout_predictor: Optional[OutputLenPredictor] = None,
+                 **overrides):
+        # -- ServingConfig shim (DESIGN.md §Serving API) -------------------
+        # One config object reaches EVERY engine — this is what closed
+        # the dropped-knob bugs (TwoPoolRuntime losing the overload
+        # kwargs, FleetRuntime never forwarding hol_window); the
+        # field-reach regression test in tests/test_serving_config.py
+        # keeps it closed. Legacy kwargs (incl. kv_block_size) fold in
+        # via ServingConfig.replace.
+        scfg = config if config is not None else ServingConfig()
+        if c_chunk is not None:
+            overrides = dict(overrides, c_chunk=c_chunk)
+        if overrides:
+            scfg = scfg.replace(**overrides)
+        self.config = scfg
         k = len(boundaries) + 1
         if len(n_maxes) != k or len(c_maxes) != k:
             raise ValueError(f"need {k} n_maxes/c_maxes for "
@@ -89,52 +99,50 @@ class FleetRuntime:
         # with fewer submeshes than pools, placement wraps round-robin
         # (pools then time-share devices — fine on a CPU smoke host,
         # a real fleet provisions enough devices per plan).
-        if mesh is not None:
+        if scfg.mesh is not None:
             from repro.launch.mesh import make_submeshes
-            subs = make_submeshes(mesh, tp_degree)
+            subs = make_submeshes(scfg.mesh, scfg.tp_degree)
             self._submeshes = [subs[i % len(subs)] for i in range(k)]
         else:
-            if tp_degree != 1:
-                raise ValueError("tp_degree > 1 needs a mesh to carve "
-                                 "replica submeshes from")
             self._submeshes = [None] * k
-        self.tp_degree = tp_degree
+        self.tp_degree = scfg.tp_degree
         self.cfg = cfg
         self.tokenizer = ByteChunkTokenizer(cfg.vocab_size)
-        self.router = GatewayRouter(boundaries=boundaries, gammas=gammas,
-                                    compressor=ExtractiveCompressor())
+        # -- output-length awareness (DESIGN.md §Serving API) --------------
+        # lout_routing / lout_reservation need a calibrated predictor;
+        # callers pass one built from their workload
+        # (OutputLenPredictor.from_workload), else the chat-shaped
+        # lmsys calibration is the default. The predictor's per-
+        # category bias EMA is fed by record_completion.
+        self.lout_predictor = lout_predictor
+        if self.lout_predictor is None and (scfg.lout_routing
+                                            or scfg.lout_reservation):
+            self.lout_predictor = OutputLenPredictor.from_workload(
+                get_workload("lmsys"))
+        self.router = GatewayRouter(
+            boundaries=boundaries, gammas=gammas,
+            compressor=ExtractiveCompressor(),
+            lout_predictor=(self.lout_predictor
+                            if scfg.lout_routing else None))
         names = pool_names(k)
-        # paged=True gives every engine a block-pool KV cache (same HBM
-        # as the dense rows by default; see engine num_blocks) — output
-        # tokens are identical either way, only residency changes.
-        # prefix_cache=True (needs paged) additionally shares full
-        # prompt blocks between requests via ref-counted block tables;
-        # GatewayRequest.session makes repeat turns land on the engine
-        # that holds their blocks (router session affinity).
-        # decode_k>1 runs each engine's decode-only dispatches as a
-        # K-step on-device scan (DESIGN.md §Engine hot path) — same
-        # output tokens, ~K-fold fewer host round-trips per token.
-        # spec_k>1 adds self-speculative drafting inside that scan
-        # (DESIGN.md §Speculative decoding) — still the same output
-        # tokens (greedy-argmax-exact verify), >1 of them per model
-        # iteration when the traffic repeats itself.
-        # preemption / max_queue_wait / swap_threshold switch every
-        # engine into overload-survival mode (DESIGN.md §Overload
-        # survival): LIFO preemption with a host-offload KV tier, and
-        # stability-aware admission that sheds once the rolling
-        # queue-wait estimate exceeds the deadline (iterations).
+        # The whole serving feature surface (paged / prefix_cache /
+        # decode_k / spec_k / overload survival / lout reservation) is
+        # configured per-engine by ONE ServingConfig; see its docstring
+        # for the field-by-field DESIGN.md map. Each engine gets the
+        # shared config with only its submesh swapped in.
         self.engines: Dict[str, InferenceEngine] = {
-            names[i]: InferenceEngine(cfg, params, n_maxes[i], c_maxes[i],
-                                      c_chunk, paged=paged,
-                                      block_size=kv_block_size,
-                                      prefix_cache=prefix_cache,
-                                      decode_k=decode_k, spec_k=spec_k,
-                                      mesh=self._submeshes[i],
-                                      preemption=preemption,
-                                      max_queue_wait=max_queue_wait,
-                                      swap_threshold=swap_threshold)
+            names[i]: InferenceEngine(
+                cfg, params, n_maxes[i], c_maxes[i],
+                config=scfg.replace(mesh=self._submeshes[i],
+                                    tp_degree=1))
             for i in range(k)}
         self._decisions: Dict[int, RoutingDecision] = {}
+        self._categories: Dict[int, str] = {}
+        # demo-tokens per datacenter-token when from_plan shrank the
+        # boundaries onto a reduced model (1.0 = native scale); the
+        # re-planner uses it to plan at datacenter scale where the
+        # hardware profiles are calibrated
+        self.ctx_scale = 1.0
 
     def device_placement(self) -> Dict[str, List[int]]:
         """pool name -> device ids its engine replica spans (one id on
@@ -145,15 +153,10 @@ class FleetRuntime:
     @classmethod
     def from_plan(cls, cfg: ModelConfig, params, plan: FleetPlan,
                   slots_per_pool: int = 4, c_chunk: int = 64,
-                  ctx_scale: Optional[float] = None,
-                  paged: bool = False,
-                  kv_block_size: int = DEFAULT_KV_BLOCK,
-                  prefix_cache: bool = False,
-                  decode_k: int = 1, spec_k: int = 1,
-                  mesh=None, tp_degree: int = 1,
-                  preemption: bool = False,
-                  max_queue_wait: Optional[float] = None,
-                  swap_threshold: Optional[int] = None) -> "FleetRuntime":
+                  ctx_scale: Optional[float] = None, *,
+                  config: Optional[ServingConfig] = None,
+                  lout_predictor: Optional[OutputLenPredictor] = None,
+                  **overrides) -> "FleetRuntime":
         """Build a runtime with the plan's boundary/gamma structure.
 
         The plan's per-GPU slot counts target datacenter hardware; a
@@ -161,7 +164,9 @@ class FleetRuntime:
         slots.  ``ctx_scale`` shrinks the token boundaries (e.g.
         ``512 / 65536`` to demo a 64K plan on a reduced model with a
         512-token cache); boundaries are kept >= 2 * c_chunk so the
-        chunked prefill path stays exercised.
+        chunked prefill path stays exercised.  Serving knobs come from
+        ``config`` (a :class:`ServingConfig`) or legacy kwargs, same
+        shim as the constructor.
         """
         scale = ctx_scale if ctx_scale is not None else 1.0
         bounds = []
@@ -173,17 +178,23 @@ class FleetRuntime:
         c_maxes = tuple(bounds) + (c_top,)
         n_maxes = tuple(min(slots_per_pool, max(1, pp.n_max))
                         for pp in plan.pools)
-        return cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
-                   c_maxes, c_chunk, paged=paged,
-                   kv_block_size=kv_block_size, prefix_cache=prefix_cache,
-                   decode_k=decode_k, spec_k=spec_k, mesh=mesh,
-                   tp_degree=tp_degree, preemption=preemption,
-                   max_queue_wait=max_queue_wait,
-                   swap_threshold=swap_threshold)
+        rt = cls(cfg, params, tuple(bounds), plan.gammas, n_maxes,
+                 c_maxes, c_chunk, config=config,
+                 lout_predictor=lout_predictor, **overrides)
+        rt.ctx_scale = scale
+        return rt
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
         """Route one request through the gateway and enqueue it on the
-        chosen pool's engine.  Returns the routing decision."""
+        chosen pool's engine.  Returns the routing decision.
+
+        With ``lout_routing`` the router banded by PREDICTED output
+        length, so the chosen pool's context may be smaller than
+        prompt + max_output_tokens; the generation budget is clamped
+        to what the pool can hold (token-budget routing — the no-OOM
+        guarantee moves from the worst case to an enforced budget).
+        With ``lout_reservation`` the engine-side ServeRequest carries
+        the prediction as its KV reservation hint."""
         prompt_tokens = self.tokenizer.count(req.text)
         r = Request(l_total=prompt_tokens + req.max_output_tokens,
                     l_in=prompt_tokens, l_out=req.max_output_tokens,
@@ -193,14 +204,37 @@ class FleetRuntime:
                                      session=req.session)
         text = decision.compressed_text if decision.compressed else req.text
         ids = self.tokenizer.encode(text)
+        max_new = req.max_output_tokens
+        if self.config.lout_routing:
+            budget = self.engines[decision.pool].c_max - len(ids)
+            max_new = max(1, min(max_new, budget))
+        hint = None
+        if self.config.lout_reservation:
+            hint = self.lout_predictor.predict(len(ids),
+                                               category=req.category,
+                                               cap=max_new)
         self.engines[decision.pool].submit(ServeRequest(
-            rid=req.rid, tokens=ids, max_new_tokens=req.max_output_tokens,
-            category=req.category))
+            rid=req.rid, tokens=ids, max_new_tokens=max_new,
+            category=req.category, l_out_hint=hint))
         self._decisions[req.rid] = decision
+        self._categories[req.rid] = req.category
         # feed the bytes-per-token EMA with the true tokenizer count
         self.router.ema.update(req.category, len(text.encode("utf-8")),
                                len(ids))
         return decision
+
+    def record_completion(self, rid: int, res: ServeResult) -> None:
+        """Feed a finished request's ACTUAL output length back into the
+        output-length model (per-category bias EMA). No-op without a
+        predictor or for shed/empty results."""
+        if self.lout_predictor is None or res.shed \
+                or not res.output_tokens:
+            return
+        d = self._decisions.get(rid)
+        if d is not None:
+            self.lout_predictor.update(d.l_in_effective,
+                                       len(res.output_tokens),
+                                       category=self._categories.get(rid))
 
     def run(self, max_iters: int = 100_000) -> Dict[int, GatewayResponse]:
         """Drive all pools to completion, interleaving their lockstep
@@ -220,6 +254,7 @@ class FleetRuntime:
         for eng in self.engines.values():
             results.update(eng.results)
         for rid, res in results.items():
+            self.record_completion(rid, res)
             d = self._decisions[rid]
             out[rid] = GatewayResponse(
                 rid=rid, pool=d.pool, compressed=d.compressed,
@@ -236,13 +271,17 @@ class TwoPoolRuntime(FleetRuntime):
 
     def __init__(self, cfg: ModelConfig, params, b_short: int, gamma: float,
                  n_max_short: int, n_max_long: int, c_max_long: int,
-                 c_chunk: int = 512, paged: bool = False,
-                 kv_block_size: int = DEFAULT_KV_BLOCK,
-                 prefix_cache: bool = False, decode_k: int = 1,
-                 spec_k: int = 1, mesh=None, tp_degree: int = 1):
-        super().__init__(cfg, params, boundaries=(b_short,), gammas=(gamma,),
+                 c_chunk: Optional[int] = None, *,
+                 config: Optional[ServingConfig] = None,
+                 lout_predictor: Optional[OutputLenPredictor] = None,
+                 **overrides):
+        # the shared ServingConfig shim forwards EVERY serving knob —
+        # this constructor used to silently drop the overload-survival
+        # kwargs (preemption / max_queue_wait / swap_threshold) by
+        # re-declaring a stale subset of the parent signature
+        super().__init__(cfg, params, boundaries=(b_short,),
+                         gammas=(gamma,),
                          n_maxes=(n_max_short, n_max_long),
                          c_maxes=(b_short, c_max_long), c_chunk=c_chunk,
-                         paged=paged, kv_block_size=kv_block_size,
-                         prefix_cache=prefix_cache, decode_k=decode_k,
-                         spec_k=spec_k, mesh=mesh, tp_degree=tp_degree)
+                         config=config, lout_predictor=lout_predictor,
+                         **overrides)

@@ -1,0 +1,154 @@
+"""core/empirical.py: the empirical plan path must CONVERGE to the
+analytic planner when fed the analytic sampler's own draws (bit-exact
+on raw arrays, close on the binned histogram), and the rolling
+histogram must track distribution shift the way the re-planner
+relies on."""
+import numpy as np
+import pytest
+
+from repro.core.empirical import (PromptHistogram, candidate_boundaries,
+                                  fleetopt_plan_empirical)
+from repro.core.planner import (DEFAULT_B_CANDIDATES, draw_samples,
+                                plan_k_pool)
+from repro.core.profiles import A100_LLAMA70B
+from repro.core.workload import get_workload
+
+LAM, SLO = 800.0, 0.5
+
+
+# ------------------------------------------------------ planner equivalence
+
+def test_raw_arrays_bit_exact_vs_analytic():
+    """Same Monte-Carlo draw + same candidate grid + same
+    compressibility mask -> fleetopt_plan_empirical IS plan_k_pool:
+    every plan field matches exactly."""
+    w = get_workload("lmsys")
+    s = draw_samples(w, seed=0)
+    analytic = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, k=2,
+                           b_candidates=DEFAULT_B_CANDIDATES, samples=s)
+    empirical = fleetopt_plan_empirical(
+        (s.l_in, s.l_out), LAM, SLO, A100_LLAMA70B, k=2,
+        b_candidates=DEFAULT_B_CANDIDATES, compressible=s.compressible)
+    assert empirical.boundaries == analytic.boundaries
+    assert empirical.gammas == analytic.gammas
+    assert empirical.total_gpus == analytic.total_gpus
+    assert empirical.annual_cost == analytic.annual_cost
+
+
+def test_fixed_point_mode_bit_exact():
+    """boundaries+gammas given -> the <1 ms re-evaluation path, equal
+    to the analytic fixed-point evaluation on the same draw."""
+    w = get_workload("azure")
+    s = draw_samples(w, seed=3)
+    analytic = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B,
+                           boundaries=(8192,), gammas=(1.5,), samples=s)
+    empirical = fleetopt_plan_empirical(
+        (s.l_in, s.l_out), LAM, SLO, A100_LLAMA70B,
+        boundaries=(8192,), gammas=(1.5,), compressible=s.compressible)
+    assert (empirical.total_gpus, empirical.annual_cost) == \
+        (analytic.total_gpus, analytic.annual_cost)
+
+
+def test_histogram_route_converges():
+    """Draws binned through PromptHistogram (the serving-path input)
+    land near the analytic optimum: boundary within one candidate
+    step, cost within 10%."""
+    w = get_workload("lmsys")
+    s = draw_samples(w, seed=0)
+    h = PromptHistogram()
+    for li, lo in zip(s.l_in[:20_000], s.l_out[:20_000]):
+        h.observe(float(li), float(lo))
+    analytic = plan_k_pool(w, LAM, SLO, profiles=A100_LLAMA70B, k=2,
+                           b_candidates=DEFAULT_B_CANDIDATES, samples=s)
+    emp = fleetopt_plan_empirical(h, LAM, SLO, A100_LLAMA70B, k=2,
+                                  b_candidates=DEFAULT_B_CANDIDATES)
+    b_a, b_e = analytic.boundaries[0], emp.boundaries[0]
+    assert 0.5 <= b_e / b_a <= 2.0, (b_a, b_e)
+    assert abs(emp.annual_cost - analytic.annual_cost) \
+        <= 0.10 * analytic.annual_cost
+
+
+def test_compressibility_mask_default_is_bernoulli():
+    w = get_workload("azure")
+    s = draw_samples(w, seed=1)
+    full = fleetopt_plan_empirical((s.l_in, s.l_out), LAM, SLO,
+                                   boundaries=(8192,), gammas=(1.5,),
+                                   p_c=1.0)
+    none = fleetopt_plan_empirical((s.l_in, s.l_out), LAM, SLO,
+                                   boundaries=(8192,), gammas=(1.5,),
+                                   p_c=0.0)
+    # no compressible mass -> no C&R relief -> at least as many GPUs
+    assert none.total_gpus >= full.total_gpus
+
+
+def test_raw_array_validation():
+    with pytest.raises(ValueError):
+        fleetopt_plan_empirical((np.ones(4), np.ones(3)), LAM)
+    with pytest.raises(ValueError):
+        fleetopt_plan_empirical((np.ones((2, 2)), np.ones((2, 2))), LAM)
+    with pytest.raises(ValueError):
+        fleetopt_plan_empirical((np.ones(0), np.ones(0)), LAM)
+
+
+# ------------------------------------------------------------- histogram
+
+def test_histogram_observe_quantile_decay():
+    h = PromptHistogram()
+    with pytest.raises(ValueError):
+        h.to_arrays()
+    with pytest.raises(ValueError):
+        h.quantile(0.5)
+    for _ in range(100):
+        h.observe(100, 28)          # l_total 128
+    assert h.observed == 100 and h.total_weight == pytest.approx(100.0)
+    q = h.quantile(0.5)
+    assert 100 <= q <= 200
+    l_in, l_out = h.to_arrays(n=256, seed=0)
+    assert len(l_in) == 256
+    assert np.allclose(l_in, 100.0) and np.allclose(l_out, 28.0)
+    h.decay(0.5)
+    assert h.total_weight == pytest.approx(50.0)
+    assert h.observed == 100        # lifetime count never decays
+    with pytest.raises(ValueError):
+        h.decay(0.0)
+    with pytest.raises(ValueError):
+        h.decay(1.5)
+
+
+def test_histogram_tracks_shift():
+    """After decaying the old window away, the quantiles follow the
+    NEW traffic — the property the re-planner's boundary-direction
+    behavior rests on."""
+    h = PromptHistogram()
+    for _ in range(200):
+        h.observe(4000, 500)
+    q_long = h.quantile(0.9)
+    for _ in range(4):
+        h.decay(0.3)
+    for _ in range(200):
+        h.observe(200, 50)
+    q_short = h.quantile(0.9)
+    assert q_short < q_long / 4, (q_long, q_short)
+
+
+def test_histogram_outlier_clamps_to_edge_bins():
+    h = PromptHistogram(lo=8, hi=1024)
+    h.observe(1, 0)                  # below range -> first bin
+    h.observe(10**9, 10**9)          # above range -> last bin
+    assert h.total_weight == pytest.approx(2.0)
+    l_in, l_out = h.to_arrays(n=8, seed=0)
+    assert np.isfinite(l_in).all() and (l_out >= 1.0).all()
+
+
+def test_candidate_boundaries_span_observed_quantiles():
+    rng = np.random.default_rng(0)
+    l_total = rng.lognormal(7.0, 1.0, size=20_000)
+    cands = candidate_boundaries(l_total, c_max_long=65536)
+    assert cands == sorted(set(cands))
+    assert all(0 < b < 65536 for b in cands)
+    p50, p999 = np.quantile(l_total, [0.5, 0.999])
+    assert cands[0] >= max(16, int(p50) - 1)
+    assert cands[-1] <= p999 * 1.5 + 1
+    # degenerate spread still yields a non-empty increasing grid
+    tight = candidate_boundaries(np.full(100, 500.0), c_max_long=65536)
+    assert tight and tight == sorted(set(tight))

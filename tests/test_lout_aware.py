@@ -1,0 +1,189 @@
+"""Output-length awareness (DESIGN.md §Serving API): the calibrated
+OutputLenPredictor, the engine's hint-tightened paged reservation
+(capacity gain when callers over-claim max_tokens, breach-preemption
+safety net when a prediction runs short — output tokens bitwise-stable
+either way), and the gateway's token-budget routing clamp."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.core.workload import OutputLenPredictor, get_workload
+from repro.models import model as M
+from repro.serving.config import ServingConfig
+from repro.serving.engine import InferenceEngine, ServeRequest
+from repro.serving.pools import FleetRuntime, GatewayRequest
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_f32("minitron-8b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------- predictor
+
+def test_predictor_monotone_and_clipped():
+    p = OutputLenPredictor.from_workload(get_workload("lmsys"))
+    preds = [p.predict(n) for n in (64, 512, 4096, 32768)]
+    assert preds == sorted(preds)
+    assert all(p.lo <= v <= p.hi for v in preds)
+    assert p.predict(10**9) == p.hi          # hi-clip
+    assert p.predict(64, cap=5) <= 5
+    assert p.predict(64, cap=0) == 1         # floor at one token
+
+
+def test_predictor_quantile_is_a_margin():
+    w = get_workload("lmsys")
+    p50 = OutputLenPredictor.from_workload(w, quantile=0.5)
+    p90 = OutputLenPredictor.from_workload(w, quantile=0.9)
+    p99 = OutputLenPredictor.from_workload(w, quantile=0.99)
+    # mid-range prompt (away from the lo/hi clips, where all
+    # quantiles collapse to the clamp)
+    a, b, c = (x.predict(512) for x in (p50, p90, p99))
+    assert a <= b <= c and a < c
+
+
+def test_predictor_bias_ema_tracks_observations():
+    p = OutputLenPredictor.from_workload(get_workload("lmsys"),
+                                         quantile=0.5)
+    base = p.predict(2048, category="agent")
+    # this category consistently produces 3x the calibrated median
+    for _ in range(200):
+        p.update(2048, 3 * base, category="agent")
+    adapted = p.predict(2048, category="agent")
+    assert adapted > 1.5 * base
+    # other categories keep the unbiased calibration
+    assert p.predict(2048, category="prose") == base
+
+
+def test_predictor_covers_sampled_lout():
+    """The p90 prediction should cover ~90% of the workload model's
+    own draws at matched prompt lengths."""
+    w = get_workload("lmsys")
+    p = OutputLenPredictor.from_workload(w, quantile=0.9)
+    _, l_in, l_out = w.sample_arrays(4000, seed=0)
+    sel = (l_in > 500) & (l_in < 2000)
+    covered = np.mean([l_out[i] <= p.predict(int(l_in[i]))
+                       for i in np.flatnonzero(sel)])
+    assert covered >= 0.80, covered
+
+
+# ----------------------------------------------- engine: tightened admission
+
+def _mk(cfg, params, num_blocks, lout_reservation, n_max=4):
+    return InferenceEngine(
+        cfg, params, n_max, 128, 16,
+        config=ServingConfig(paged=True, block_size=8,
+                             num_blocks=num_blocks, preemption=True,
+                             lout_reservation=lout_reservation))
+
+
+def test_hints_multiply_admission_concurrency(cfg, params):
+    """Three requests each CLAIM max_new=96 (worst case 14 blocks of
+    8). With 20 physical blocks, worst-case admission fits ONE at a
+    time; a hint of 8 tokens (3 blocks each) admits all three at once.
+    The requests then outrun their optimistic hints — the breach
+    machinery absorbs it, and the emitted tokens stay bitwise the
+    worst-case run's."""
+    def run(lout_reservation):
+        eng = _mk(cfg, params, 20, lout_reservation)
+        for i in range(3):
+            eng.submit(ServeRequest(rid=i, tokens=[5 + i] * 10,
+                                    max_new_tokens=96, l_out_hint=8))
+        eng.step()                 # admission happens on the first step
+        running = sum(r is not None for r in eng.slot_req)
+        res = eng.run_to_completion(max_iters=10_000)
+        assert all(len(r.output_tokens) == 96 and not r.shed
+                   for r in res.values())
+        return (running, {r: v.output_tokens for r, v in res.items()},
+                eng.overload_stats["reservation_breach"])
+
+    conc_worst, out_worst, breaches_worst = run(False)
+    conc_hint, out_hint, breaches_hint = run(True)
+    assert conc_worst == 1                   # worst case serializes
+    assert conc_hint == 3                    # hints admit all three
+    assert breaches_worst == 0
+    assert breaches_hint >= 1                # overruns were absorbed
+    assert out_hint == out_worst             # bitwise-identical tokens
+
+
+def test_no_hint_means_worst_case(cfg, params):
+    eng = _mk(cfg, params, 20, True)
+    for i in range(3):
+        eng.submit(ServeRequest(rid=i, tokens=[5 + i] * 10,
+                                max_new_tokens=96))   # no hint
+    eng.step()
+    assert sum(r is not None for r in eng.slot_req) == 1
+
+
+def test_breach_preempts_never_oom(cfg, params):
+    """Requests that outrun their hints (hint=4, actually decode 40)
+    must finish with the same tokens as a worst-case run: the free
+    pool (12 blocks vs 21 blocks of true demand) dries up mid-decode
+    and reservation-breach preemption serializes the overrun instead
+    of OOMing."""
+    def run(lout_reservation, hint):
+        eng = _mk(cfg, params, 12, lout_reservation)
+        for i in range(3):
+            eng.submit(ServeRequest(rid=i, tokens=[5 + i] * 12,
+                                    max_new_tokens=40, l_out_hint=hint))
+        res = eng.run_to_completion(max_iters=10_000)
+        assert set(res) == {0, 1, 2}
+        for r in res.values():
+            assert len(r.output_tokens) == 40 and not r.shed
+        return ({r: v.output_tokens for r, v in res.items()},
+                eng.overload_stats["reservation_breach"])
+
+    baseline, breaches0 = run(False, None)
+    optimistic, breaches1 = run(True, 4)
+    assert breaches0 == 0
+    assert breaches1 >= 1, "under-hinted run must record breaches"
+    assert optimistic == baseline            # bitwise-identical output
+
+
+def test_generous_hint_never_breaches(cfg, params):
+    eng = _mk(cfg, params, 48, True)
+    eng.submit(ServeRequest(rid=0, tokens=[3] * 12, max_new_tokens=16,
+                            l_out_hint=16))
+    res = eng.run_to_completion(max_iters=5_000)
+    assert len(res[0].output_tokens) == 16
+    assert eng.overload_stats["reservation_breach"] == 0
+
+
+# ------------------------------------------------- gateway: routing clamp
+
+def test_lout_routing_bands_by_prediction_and_clamps(cfg, params):
+    """With lout_routing the router bands by the PREDICTED output
+    length, not the caller's max_tokens claim — a short prompt with an
+    inflated max_tokens stays in the short pool, and its generation
+    budget is clamped to what that pool's context can hold."""
+    predictor = OutputLenPredictor.from_workload(get_workload("lmsys"))
+
+    def build(**kw):
+        return FleetRuntime(cfg, params, boundaries=(64,), gammas=(1.2,),
+                            n_maxes=(2, 2), c_maxes=(96, 256), c_chunk=16,
+                            config=ServingConfig(paged=True,
+                                                 preemption=True, **kw),
+                            lout_predictor=predictor)
+
+    text = "short prompt inflated claim " * 4     # ~28 tokens
+    claim = 200                                   # caller over-claims
+
+    rt = build()
+    d = rt.submit(GatewayRequest(0, text, claim))
+    assert d.pool == "long"                       # worst-case banding
+
+    rt = build(lout_routing=True, lout_reservation=True)
+    d = rt.submit(GatewayRequest(0, text, claim))
+    assert d.pool == "short"                      # predicted banding
+    res = rt.run(max_iters=5_000)
+    out = res[0].output_tokens
+    # the clamp bounds generation to the pool's remaining context
+    short = rt.engines["short"]
+    assert 1 <= len(out) <= short.c_max
+    assert not res[0].shed

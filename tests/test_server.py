@@ -1,0 +1,316 @@
+"""HTTP surface of the asyncio serving gateway: structured 4xx JSON,
+OpenAI-style SSE framing with the (n_max, K) flush unit, Prometheus
+text exposition (hand-parsed — prometheus_client is deliberately not a
+dependency), streamed-vs-offline bitwise parity, and the closed-loop
+re-planner moving the live boundary in the analytically predicted
+direction under a shifted empirical CDF."""
+import asyncio
+import json
+import re
+
+import jax
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.serving.config import ServingConfig
+from repro.serving.pools import FleetRuntime, GatewayRequest
+from repro.serving.replanner import Replanner
+from repro.serving.server import ServingGateway
+
+DECODE_K = 4
+MAX_TOKENS = 12
+PROMPT = "gateway stream parity check " * 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced_f32("minitron-8b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def make_runtime(model, **overrides):
+    cfg, params = model
+    kw = dict(decode_k=DECODE_K, **overrides)
+    return FleetRuntime(cfg, params, boundaries=(64,), gammas=(1.4,),
+                        n_maxes=(2, 2), c_maxes=(128, 256), c_chunk=16,
+                        config=ServingConfig(**kw))
+
+
+async def _call(host, port, method, path, body=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = body if body is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(payload)}\r\n\r\n"
+                 .encode() + payload)
+    await writer.drain()
+    raw = await asyncio.wait_for(reader.read(), timeout=120.0)
+    writer.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    headers = dict(ln.split(":", 1) for ln in lines[1:] if ":" in ln)
+    headers = {k.strip().lower(): v.strip() for k, v in headers.items()}
+    return int(lines[0].split()[1]), headers, rest
+
+
+def with_gateway(model, coro_fn, *, replanner_kw=None, runtime=None):
+    """Run ``coro_fn(gw)`` against a live gateway on an ephemeral
+    port, tearing the driver task down afterwards."""
+    rt = runtime if runtime is not None else make_runtime(model)
+    rp = None
+    if replanner_kw is not None:
+        rp = Replanner(rt, **replanner_kw)
+
+    async def main():
+        gw = ServingGateway(rt, replanner=rp, port=0)
+        await gw.start()
+        try:
+            return await coro_fn(gw)
+        finally:
+            await gw.stop()
+
+    return asyncio.run(main())
+
+
+def _sse_chunks(body):
+    chunks, done = [], False
+    for ev in body.split(b"\n\n"):
+        if ev == b"data: [DONE]":
+            done = True
+        elif ev.startswith(b"data: "):
+            chunks.append(json.loads(ev[6:]))
+    return chunks, done
+
+
+# ------------------------------------------------------------------ health
+
+def test_health(model):
+    async def go(gw):
+        status, headers, body = await _call(gw.host, gw.port, "GET",
+                                            "/health")
+        assert status == 200
+        assert headers["content-type"] == "application/json"
+        h = json.loads(body)
+        assert h["status"] == "ok"
+        assert set(h["pools"]) == {"short", "long"}
+        assert h["boundaries"] == [64]
+        for p in h["pools"].values():
+            assert {"slots", "c_max", "occupancy",
+                    "queue_depth"} <= set(p)
+    with_gateway(model, go)
+
+
+# --------------------------------------------------------------- 4xx paths
+
+def test_structured_errors(model):
+    async def go(gw):
+        cases = [
+            ("POST", "/v1/completions", b"{oops", 400, None),
+            ("POST", "/v1/completions", b"[]", 400, None),
+            ("POST", "/v1/completions", b'{"max_tokens": 4}', 400,
+             "prompt"),
+            ("POST", "/v1/completions",
+             b'{"prompt": "x", "max_tokens": 0}', 400, "max_tokens"),
+            ("POST", "/v1/completions",
+             b'{"prompt": "x", "max_tokens": true}', 400, "max_tokens"),
+            ("POST", "/v1/completions",
+             b'{"prompt": "x", "stream": "yes"}', 400, "stream"),
+            ("GET", "/v1/nope", b"", 404, None),
+            ("GET", "/v1/completions", b"", 405, None),
+            ("POST", "/health", b"", 405, None),
+            ("POST", "/admin/replan", b"", 503, None),  # no replanner
+        ]
+        for method, path, body, want, param in cases:
+            status, headers, raw = await _call(gw.host, gw.port, method,
+                                               path, body)
+            assert status == want, (method, path, status, raw[:200])
+            assert headers["content-type"] == "application/json"
+            err = json.loads(raw)["error"]
+            assert {"message", "type", "param", "code"} <= set(err)
+            if param is not None:
+                assert err["param"] == param
+        # the 4xx traffic shows up in the scrape
+        status, _, raw = await _call(gw.host, gw.port, "GET", "/metrics")
+        assert 'fleetopt_http_requests_total{method="POST",' \
+            'path="/v1/completions",status="400"} 6' in raw.decode()
+    with_gateway(model, go)
+
+
+# ----------------------------------------------------- SSE framing + parity
+
+def test_sse_framing_flushes_and_parity(model):
+    """One streaming completion: OpenAI text_completion chunk shape,
+    more than one flush (decode_k=4 over 12 tokens syncs >= 3 times),
+    [DONE] terminator — and the streamed ids are BITWISE the ids of the
+    same prompt drained offline through an identical fresh runtime."""
+    async def go(gw):
+        req = json.dumps({"prompt": PROMPT, "max_tokens": MAX_TOKENS,
+                          "stream": True}).encode()
+        status, headers, body = await _call(gw.host, gw.port, "POST",
+                                            "/v1/completions", req)
+        assert status == 200
+        assert headers["content-type"] == "text/event-stream"
+        chunks, done = _sse_chunks(body)
+        assert done, "stream must terminate with data: [DONE]"
+        for c in chunks:
+            assert c["object"] == "text_completion"
+            assert c["id"].startswith("cmpl-")
+            choice = c["choices"][0]
+            assert {"index", "text", "token_ids",
+                    "finish_reason"} <= set(choice)
+            # text is the canonical rendering of the ids in the chunk
+            assert choice["text"] == "".join(f" {t}"
+                                             for t in choice["token_ids"])
+        token_chunks = [c for c in chunks
+                        if c["choices"][0]["finish_reason"] is None]
+        assert len(token_chunks) > 1, "expected >1 flush unit"
+        assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+        assert chunks[-1]["fleetopt"]["pool"] in ("short", "long")
+        return [t for c in token_chunks
+                for t in c["choices"][0]["token_ids"]]
+
+    streamed = with_gateway(model, go)
+    assert len(streamed) == MAX_TOKENS
+
+    # offline drain path: fresh identical runtime, same prompt
+    rt = make_runtime(model)
+    rt.submit(GatewayRequest(0, PROMPT, MAX_TOKENS))
+    offline = rt.run(max_iters=5_000)[0].output_tokens
+    assert streamed == offline
+
+
+def test_nonstream_matches_stream(model):
+    async def go(gw):
+        req = json.dumps({"prompt": PROMPT,
+                          "max_tokens": MAX_TOKENS}).encode()
+        status, _, body = await _call(gw.host, gw.port, "POST",
+                                      "/v1/completions", req)
+        assert status == 200
+        r = json.loads(body)
+        assert r["usage"]["completion_tokens"] == MAX_TOKENS
+        assert r["usage"]["total_tokens"] == \
+            r["usage"]["prompt_tokens"] + MAX_TOKENS
+        req = json.dumps({"prompt": PROMPT, "max_tokens": MAX_TOKENS,
+                          "stream": True}).encode()
+        _, _, sse = await _call(gw.host, gw.port, "POST",
+                                "/v1/completions", req)
+        chunks, _ = _sse_chunks(sse)
+        streamed = [t for c in chunks
+                    for t in c["choices"][0]["token_ids"]]
+        assert streamed == r["choices"][0]["token_ids"]
+    with_gateway(model, go)
+
+
+# ----------------------------------------------------------------- metrics
+
+_SAMPLE = re.compile(r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'
+                     r'(\{[a-zA-Z0-9_]+="[^"]*"'
+                     r'(,[a-zA-Z0-9_]+="[^"]*")*\})? '
+                     r'(-?\d+(\.\d+)?([eE][+-]?\d+)?|[+-]?Inf|NaN)$')
+
+
+def test_metrics_prometheus_text(model):
+    """/metrics parses as Prometheus text exposition format line by
+    line (hand-rolled parser — the point is that a stock Prometheus
+    scraper would accept it), with HELP/TYPE for every family and the
+    per-pool + boundary series the dashboards key on."""
+    async def go(gw):
+        req = json.dumps({"prompt": PROMPT,
+                          "max_tokens": MAX_TOKENS}).encode()
+        await _call(gw.host, gw.port, "POST", "/v1/completions", req)
+        status, headers, body = await _call(gw.host, gw.port, "GET",
+                                            "/metrics")
+        assert status == 200
+        assert headers["content-type"].startswith("text/plain")
+        text = body.decode()
+        typed, helped = set(), set()
+        for line in text.splitlines():
+            if line.startswith("# TYPE "):
+                name, mtype = line.split()[2:4]
+                assert mtype in ("counter", "gauge"), line
+                typed.add(name)
+            elif line.startswith("# HELP "):
+                helped.add(line.split()[2])
+            elif line:
+                m = _SAMPLE.match(line)
+                assert m, f"unparsable sample line: {line!r}"
+                assert m.group(1) in typed, f"sample before TYPE: {line}"
+        assert typed == helped
+        for needle in ('fleetopt_dispatches_total{pool="long"}',
+                       'fleetopt_dispatches_total{pool="short"}',
+                       'fleetopt_utilization{pool="short"}',
+                       'fleetopt_boundary_tokens{index="0"} 64',
+                       'fleetopt_gamma{index="0"} 1.4',
+                       'fleetopt_requests_routed_total{pool=',
+                       "fleetopt_completions_total 1",
+                       "fleetopt_stream_tokens_total 12"):
+            assert needle in text, f"missing {needle}"
+        # dispatches_per_token is inf until a decode-only dispatch ran
+        # on BOTH pools; inf samples must be dropped, never emitted
+        assert "inf" not in text and "Inf" not in text
+    with_gateway(model, go)
+
+
+# ---------------------------------------------------------- re-plan loop
+
+def test_replan_moves_boundary_in_predicted_direction(model):
+    """Closed loop: short-shifted traffic must move the live boundary
+    DOWN (the empirical CDF's candidate grid sits at the observed
+    quantiles, below the provisioned boundary), and a subsequent
+    long-shifted window must move it back UP — both applied to the
+    live router between requests, no restart."""
+    async def go(gw):
+        async def burst(text, n, max_tokens=6):
+            for i in range(n):
+                req = json.dumps({"prompt": f"{text} {i} " * 4,
+                                  "max_tokens": max_tokens}).encode()
+                status, _, _ = await _call(gw.host, gw.port, "POST",
+                                           "/v1/completions", req)
+                assert status == 200
+
+        async def replan():
+            status, _, body = await _call(gw.host, gw.port, "POST",
+                                          "/admin/replan")
+            assert status == 200
+            return json.loads(body)
+
+        b0 = gw.runtime.router.boundaries[0]
+        await burst("tiny", 6)
+        rep = await replan()
+        assert rep["applied"], rep
+        b_short = gw.runtime.router.boundaries[0]
+        assert b_short < b0, (b0, b_short)
+        assert rep["boundaries_after"] == [b_short]
+
+        # shift the window long: prompts near the pool-0 context edge
+        await burst("a much longer synthetic prompt that pushes the "
+                    "empirical distribution toward the long pool", 8,
+                    max_tokens=8)
+        rep = await replan()
+        b_long = gw.runtime.router.boundaries[0]
+        assert b_long > b_short, (b_short, b_long, rep)
+        # boundary stays within what pool 0 can actually hold
+        assert b_long <= list(gw.runtime.engines.values())[0].c_max
+
+        # the scrape tracks the live vector
+        _, _, body = await _call(gw.host, gw.port, "GET", "/metrics")
+        assert f'fleetopt_boundary_tokens{{index="0"}} {b_long}' \
+            in body.decode()
+        assert "fleetopt_replan_applied_total 2" in body.decode()
+
+    with_gateway(model, go,
+                 replanner_kw=dict(min_observed=4, n_samples=1024,
+                                   lam=50.0, decay=0.3,
+                                   plan_scale=128.0))
+
+
+def test_replan_insufficient_data_is_a_noop(model):
+    async def go(gw):
+        b0 = list(gw.runtime.router.boundaries)
+        status, _, body = await _call(gw.host, gw.port, "POST",
+                                      "/admin/replan")
+        rep = json.loads(body)
+        assert status == 200 and not rep["applied"]
+        assert "insufficient" in rep["reason"]
+        assert list(gw.runtime.router.boundaries) == b0
+    with_gateway(model, go, replanner_kw=dict(min_observed=4))

@@ -1,0 +1,195 @@
+"""ServingConfig as the single serving-knob surface: validation, the
+legacy-kwargs shim (bitwise parity), and the field-reach regression
+that pins the two historical dropped-knob bugs (TwoPoolRuntime losing
+preemption/max_queue_wait/swap_threshold, FleetRuntime never
+forwarding hol_window) closed for EVERY current and future field."""
+import dataclasses
+
+import jax
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.serving.config import ServingConfig
+from repro.serving.engine import InferenceEngine, ServeRequest
+from repro.serving.pools import FleetRuntime, TwoPoolRuntime
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_f32("minitron-8b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------- validation
+
+def test_defaults_valid_and_frozen():
+    c = ServingConfig()
+    assert c.decode_k == 1 and not c.paged and c.hol_window == 2
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.decode_k = 4
+
+
+@pytest.mark.parametrize("bad", [
+    {"c_chunk": 0},
+    {"decode_impl": "triton"},
+    {"decode_k": 0},
+    {"spec_k": 0},
+    {"spec_ngram": 0},
+    {"block_size": 0},
+    {"num_blocks": 0},
+    {"prefix_cache": True},                  # needs paged
+    {"max_queue_wait": 0.0},
+    {"swap_threshold": -1},
+    {"hol_window": -1},
+    {"tp_degree": 0},
+    {"tp_degree": 2},                        # tp > 1 needs a mesh
+    {"lout_reservation": True},              # needs paged + preemption
+    {"lout_reservation": True, "paged": True},
+])
+def test_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        ServingConfig(**bad)
+
+
+def test_replace_and_aliases():
+    c = ServingConfig().replace(paged=True, kv_block_size=8)
+    assert c.paged and c.block_size == 8
+    assert ServingConfig().block_size != 8 or True   # original untouched
+    with pytest.raises(TypeError) as ei:
+        ServingConfig().replace(decode_kk=2)
+    assert "decode_kk" in str(ei.value)
+    assert "decode_k" in str(ei.value)       # lists the valid knobs
+    # replace re-validates the combined config
+    with pytest.raises(ValueError):
+        ServingConfig().replace(prefix_cache=True)
+
+
+def test_from_kwargs_matches_constructor():
+    assert ServingConfig.from_kwargs(paged=True, decode_k=3) \
+        == ServingConfig(paged=True, decode_k=3)
+
+
+# ------------------------------------------------- config-vs-kwargs parity
+
+def _drain(eng):
+    reqs = [ServeRequest(rid=i, tokens=[3 + i] * (10 + 7 * i),
+                         max_new_tokens=6) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run_to_completion(max_iters=5_000)
+    return ({rid: r.output_tokens for rid, r in res.items()},
+            eng.dispatches, eng.decode_tokens_emitted)
+
+
+def test_engine_config_vs_kwargs_bitwise(cfg, params):
+    """An engine built from a ServingConfig is the SAME engine as one
+    built from the legacy kwargs: identical output tokens and identical
+    dispatch/token counters on the same request trace."""
+    kw = dict(paged=True, block_size=8, decode_k=2, c_chunk=16)
+    legacy = InferenceEngine(cfg, params, 2, 96, **kw)
+    via_cfg = InferenceEngine(cfg, params, 2, 96,
+                              config=ServingConfig(**kw))
+    assert legacy.config == via_cfg.config
+    assert _drain(legacy) == _drain(via_cfg)
+
+
+def test_runtime_config_vs_kwargs_bitwise(cfg, params):
+    from repro.serving.pools import GatewayRequest
+    kw = dict(paged=True, decode_k=2, preemption=True, c_chunk=16)
+    outs = []
+    for build in (lambda: TwoPoolRuntime(cfg, params, 64, 1.4, 2, 2, 192,
+                                         **kw),
+                  lambda: TwoPoolRuntime(cfg, params, 64, 1.4, 2, 2, 192,
+                                         config=ServingConfig(**kw))):
+        rt = build()
+        for i in range(3):
+            rt.submit(GatewayRequest(i, f"parity req {i} " * (4 + 6 * i),
+                                     8))
+        res = rt.run(max_iters=5_000)
+        outs.append({rid: (r.pool, r.output_tokens)
+                     for rid, r in res.items()})
+    assert outs[0] == outs[1]
+
+
+# ----------------------------------------------------- field-reach pinning
+
+# ServingConfig field -> how to read it back off a constructed engine
+# (None = runtime-level field checked separately). Adding a config
+# field without wiring it through the runtimes AND extending this map
+# fails test_every_field_reaches_engines.
+_ENGINE_ATTR = {
+    "c_chunk": lambda e: e.c_chunk,
+    "eos_id": lambda e: e.eos_id,
+    "decode_impl": lambda e: e.decode_impl,
+    "decode_k": lambda e: e.decode_k,
+    "spec_k": lambda e: e.spec_k,
+    "spec_ngram": lambda e: e.spec_ngram,
+    "paged": lambda e: e.paged,
+    "block_size": lambda e: e.block_size,
+    "num_blocks": lambda e: e.num_blocks,
+    "prefix_cache": lambda e: e.prefix_cache,
+    "preemption": lambda e: e.preemption,
+    "max_queue_wait": lambda e: e.max_queue_wait,
+    "swap_threshold": lambda e: e.swap_threshold,
+    "hol_window": lambda e: e.hol_window,
+    "lout_reservation": lambda e: e.lout_reservation,
+    "mesh": lambda e: e.mesh,
+    "parallel": None,
+    "tp_degree": None,
+    "lout_routing": None,
+}
+
+
+def test_every_field_reaches_engines(cfg, params):
+    """Regression for the dropped-knob bugs: EVERY ServingConfig field
+    set to a non-default value must be observable on the engines a
+    TwoPoolRuntime constructs (the constructor that historically lost
+    preemption / max_queue_wait / swap_threshold, via a FleetRuntime
+    that historically never forwarded hol_window)."""
+    fields = {f.name for f in dataclasses.fields(ServingConfig)}
+    assert fields == set(_ENGINE_ATTR), \
+        "new ServingConfig field: extend the reach map (and the " \
+        "runtime plumbing) for it"
+    scfg = ServingConfig(
+        c_chunk=24, eos_id=7, decode_k=2, spec_k=2, spec_ngram=2,
+        paged=True, block_size=8, num_blocks=96, prefix_cache=True,
+        preemption=True, max_queue_wait=50.0, swap_threshold=3,
+        hol_window=4, lout_reservation=True, lout_routing=True)
+    defaults = ServingConfig()
+    non_default = {f for f in fields
+                   if getattr(scfg, f) != getattr(defaults, f)}
+    # everything except the mesh/parallel trio is exercised non-default
+    assert fields - non_default <= {"mesh", "parallel", "tp_degree",
+                                    "decode_impl"}
+    rt = TwoPoolRuntime(cfg, params, 64, 1.4, 2, 2, 192, config=scfg)
+    for eng in rt.engines.values():
+        for name, get in _ENGINE_ATTR.items():
+            if get is None:
+                continue
+            assert get(eng) == getattr(scfg, name), \
+                f"ServingConfig.{name} did not reach the engine"
+    # runtime-level fields
+    assert rt.tp_degree == scfg.tp_degree
+    assert rt.router.lout_predictor is rt.lout_predictor is not None
+    assert rt.config == scfg
+
+
+def test_fleet_runtime_forwards_hol_window(cfg, params):
+    rt = FleetRuntime(reduced_f32("minitron-8b"), params,
+                      boundaries=(64,), gammas=(1.2,), n_maxes=(2, 2),
+                      c_maxes=(64, 192), c_chunk=16, hol_window=5)
+    assert all(e.hol_window == 5 for e in rt.engines.values())
+
+
+def test_two_pool_forwards_overload_knobs(cfg, params):
+    rt = TwoPoolRuntime(cfg, params, 64, 1.4, 2, 2, 192, c_chunk=16,
+                        paged=True, preemption=True, max_queue_wait=9.0,
+                        swap_threshold=2)
+    for e in rt.engines.values():
+        assert e.preemption and e.max_queue_wait == 9.0 \
+            and e.swap_threshold == 2
