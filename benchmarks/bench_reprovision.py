@@ -1,0 +1,241 @@
+"""Live fleet re-provisioning: zero-drop rebuild and crash recovery
+(ISSUE 10; DESIGN.md §Live re-provisioning & fault injection).
+
+Drives a tiny two-pool paged fleet through three iteration-clocked
+scenarios with IDENTICAL request streams (eos disabled, greedy — every
+number is deterministic across machines):
+
+  * ``base``: uninterrupted run — the bitwise token reference and the
+    completion-round baseline;
+  * ``reprovision``: mid-flight ``FleetRuntime.reprovision`` shrinks
+    the short pool's slot count (every in-flight request is
+    checkpointed through the host-offload tier and restored on the
+    rebuilt engine). Gated flags: ``zero_drop`` (every submitted
+    request completes, none timed out / shed) and ``token_parity``
+    (outputs bitwise identical to ``base``). ``migration_downtime_iters``
+    is the extra drive rounds the rebuild costs end-to-end;
+  * ``crash``: a FaultInjector kills the short pool mid-flight; the
+    drive loop recovers via ``recover_pool`` (rebuild + migrate the
+    salvaged requests one pool up). Gated flags: ``crash_no_loss``
+    (no accepted request is lost) and ``crash_token_parity`` (the
+    re-routed requests still emit bitwise the reference tokens — the
+    masked-no-op row-independence invariant, DESIGN.md §Engine).
+
+The DES mirror (sim/des.py simulate_pool with ``reconfig_at``) runs
+the same capacity step on the analytical clock; ``des_no_drop`` gates
+that its transient also serves every offered request.
+
+Writes benchmarks/results/reprovision.csv and the repo-root
+``BENCH_reprovision.json`` record (gated by check_regression.py).
+"""
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np                                               # noqa: E402
+
+from benchmarks.common import emit                               # noqa: E402
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_reprovision.json")
+
+B_SHORT, C_LONG, C_CHUNK, BLOCK = 64, 192, 16, 16
+N_SHORT, N_LONG = 4, 2
+WARM_ROUNDS = 6                # drive rounds before the mid-flight event
+RESHAPE_N_MAX = 2              # short pool 4 -> 2 slots mid-flight
+
+
+def _tiny_cfg():
+    from repro.configs.base import get_config
+    return dataclasses.replace(
+        get_config("llama3-70b").reduced(), dtype="float32",
+        d_model=64, d_ff=128, num_heads=2, num_kv_heads=1, head_dim=32,
+        vocab_size=256)
+
+
+def _requests(n_req: int, seed: int):
+    """Deterministic gateway requests: half short-band, half long-band
+    prompts (byte-chunk tokenizer, so token count tracks text length),
+    eos disabled -> fixed service lengths."""
+    from repro.serving.pools import GatewayRequest
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        long = i % 2 == 1
+        words = int(rng.integers(18, 30)) if long \
+            else int(rng.integers(2, 8))
+        max_new = int(rng.integers(6, 14))
+        reqs.append(GatewayRequest(i, f"req {i} " + "lorem ipsum " * words,
+                                   max_new))
+    return reqs
+
+
+def _fleet(cfg, params):
+    from repro.serving.config import ServingConfig
+    from repro.serving.pools import TwoPoolRuntime
+    return TwoPoolRuntime(
+        cfg, params, b_short=B_SHORT, gamma=1.0, n_max_short=N_SHORT,
+        n_max_long=N_LONG, c_max_long=C_LONG,
+        config=ServingConfig(paged=True, block_size=BLOCK,
+                             preemption=True, c_chunk=C_CHUNK))
+
+
+def _drive(rt, max_rounds: int = 200_000, on_dead=None) -> int:
+    """Round-robin step every busy engine until the fleet drains;
+    returns the number of drive rounds (the fleet's iteration clock).
+    ``on_dead(pool)`` handles an EngineDead raise (crash scenario)."""
+    from repro.serving.engine import EngineDead
+    rounds = 0
+    while any(e.busy() for e in rt.engines.values()):
+        for name in list(rt.engines):
+            eng = rt.engines[name]
+            if not eng.busy():
+                continue
+            try:
+                eng.step()
+            except EngineDead:
+                assert on_dead is not None, "unexpected engine death"
+                on_dead(name)
+        rounds += 1
+        assert rounds < max_rounds, "fleet drive did not terminate"
+    return rounds
+
+
+def _drive_rounds(rt, k: int) -> int:
+    done = 0
+    for _ in range(k):
+        if not any(e.busy() for e in rt.engines.values()):
+            break
+        for eng in rt.engines.values():
+            if eng.busy():
+                eng.step()
+        done += 1
+    return done
+
+
+def _collect(rt):
+    """Drain is already complete: run() just consumes the results."""
+    return rt.run(max_iters=1)
+
+
+def run(quick: bool = False) -> dict:
+    import jax
+    from repro.models import model as M
+    from repro.serving.reconfigure import FaultInjector, recover_pool
+    from repro.sim.des import simulate_pool
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 10 if quick else 24
+    reqs = _requests(n_req, seed=0)
+
+    # --- base: uninterrupted reference (bitwise + round baselines) ----
+    rt = _fleet(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    rounds_base = _drive_rounds(rt, WARM_ROUNDS) + _drive(rt)
+    base = _collect(rt)
+    base_out = {rid: resp.output_tokens for rid, resp in base.items()}
+    assert len(base) == n_req
+
+    # --- reprovision: shrink the short pool mid-flight ----------------
+    rt = _fleet(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    pre = _drive_rounds(rt, WARM_ROUNDS)
+    info = rt.reprovision("short", n_max=RESHAPE_N_MAX)
+    rounds_reprov = pre + _drive(rt)
+    res = _collect(rt)
+    zero_drop = bool(
+        set(res) == set(base_out)
+        and not any(r.timed_out or r.shed for r in res.values()))
+    token_parity = bool(all(res[rid].output_tokens == base_out[rid]
+                            for rid in base_out if rid in res))
+    downtime = rounds_reprov - rounds_base
+
+    # --- crash: kill the short pool, recover, re-route one pool up ----
+    rt = _fleet(cfg, params)
+    inj = FaultInjector(rt)
+    for r in reqs:
+        rt.submit(r)
+    _drive_rounds(rt, WARM_ROUNDS)
+    inj.kill("short")
+    recoveries = []
+
+    def on_dead(pool):
+        recoveries.append(recover_pool(rt, pool, blackout_s=0.0))
+
+    rounds_crash = _drive(rt, on_dead=on_dead)
+    resc = _collect(rt)
+    crash_no_loss = bool(
+        set(resc) == set(base_out)
+        and not any(r.timed_out or r.shed for r in resc.values()))
+    crash_parity = bool(all(resc[rid].output_tokens == base_out[rid]
+                            for rid in base_out if rid in resc))
+
+    # --- DES mirror: the same capacity step on the analytical clock ---
+    rng = np.random.default_rng(1)
+    n_des = 400 if quick else 2000
+    arr = np.cumsum(rng.exponential(0.6, n_des))
+    l_in = rng.integers(8, 48, n_des).astype(float)
+    l_out = rng.integers(6, 14, n_des).astype(float)
+    des_kw = dict(c_slots=N_SHORT, t_iter=1.0, t_chunk=1.0,
+                  c_chunk=C_CHUNK, warmup=0.0)
+    des_base = simulate_pool(arr, l_in, l_out, **des_kw)
+    t_rc = float(arr[n_des // 2])
+    des_rc = simulate_pool(arr, l_in, l_out, **des_kw,
+                           reconfig_at=t_rc,
+                           reconfig_slots=RESHAPE_N_MAX,
+                           migration_s=2.0)
+    des_no_drop = bool(des_rc.served == n_des and des_rc.migrated > 0)
+
+    rows = [
+        {"scenario": "base", "rounds": rounds_base,
+         "completed": len(base), "migrated": 0, "rerouted": 0},
+        {"scenario": "reprovision", "rounds": rounds_reprov,
+         "completed": len(res), "migrated": info["migrated"],
+         "rerouted": info["rerouted"]},
+        {"scenario": "crash", "rounds": rounds_crash + WARM_ROUNDS,
+         "completed": len(resc),
+         "migrated": sum(r["migrated"] for r in recoveries),
+         "rerouted": len(recoveries)},
+    ]
+    emit("reprovision", rows)
+
+    record = {
+        "n_requests": n_req,
+        "warm_rounds": WARM_ROUNDS,
+        "rounds_base": rounds_base,
+        "rounds_reprovision": rounds_reprov,
+        "migration_downtime_iters": downtime,
+        "checkpointed": info["checkpointed"],
+        "migrated_requests": info["migrated"],
+        "zero_drop": zero_drop,
+        "token_parity": token_parity,
+        "crash_no_loss": crash_no_loss,
+        "crash_token_parity": crash_parity,
+        "crash_recoveries": len(recoveries),
+        "des": {
+            "offered": n_des, "served": des_rc.served,
+            "migrated": des_rc.migrated,
+            "wait_p99_base": round(des_base.wait_p99(), 2),
+            "wait_p99_reconfig": round(des_rc.wait_p99(), 2),
+        },
+        "des_no_drop": des_no_drop,
+        "quick": quick,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# reprovision: zero_drop={zero_drop}, "
+          f"token_parity={token_parity}, crash_no_loss={crash_no_loss}, "
+          f"downtime={downtime} iters, des_no_drop={des_no_drop} "
+          f"-> {os.path.basename(ROOT_JSON)}")
+    return record
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

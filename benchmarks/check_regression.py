@@ -50,6 +50,20 @@ FAILS (exit 1) on a >25% regression.
     grid step of each other). Per-load goodput is additionally compared
     against the committed record within the 25% tolerance.
 
+``BENCH_reprovision.json`` (optional 11th/12th args):
+
+  * iteration-clocked and greedy like the overload record, so the five
+    flags are DETERMINISTIC and gate HARD: ``zero_drop`` and
+    ``token_parity`` (a mid-flight engine rebuild loses nothing and
+    resumed outputs are bitwise the uninterrupted run's),
+    ``crash_no_loss`` and ``crash_token_parity`` (an injected engine
+    kill loses no accepted request; recovered requests still match
+    bitwise after re-routing one pool up), and ``des_no_drop`` (the
+    DES capacity-step transient serves every offered request).
+    ``migration_downtime_iters`` must additionally stay a small
+    fraction of the run (< 25% of ``rounds_base``) — a rebuild that
+    dominates the drive is a regression even if nothing drops.
+
 ``BENCH_speculative.json`` (optional 7th/8th args):
 
   * ``headline.token_parity`` — deterministic and gated HARD: the
@@ -70,7 +84,8 @@ Usage: python benchmarks/check_regression.py COMMITTED.json FRESH.json
            [COMMITTED_hotpath.json FRESH_hotpath.json
             [COMMITTED_sharded.json FRESH_sharded.json
              [COMMITTED_speculative.json FRESH_speculative.json
-              [COMMITTED_overload.json FRESH_overload.json]]]]
+              [COMMITTED_overload.json FRESH_overload.json
+               [COMMITTED_reprovision.json FRESH_reprovision.json]]]]]
 """
 import json
 import sys
@@ -234,8 +249,39 @@ def compare_overload(committed: dict, fresh: dict) -> list:
     return bad
 
 
+def compare_reprovision(committed: dict, fresh: dict) -> list:
+    """Live re-provisioning record: five deterministic hard flags (see
+    module docstring) plus a relative downtime ceiling. The committed
+    record only anchors flag PRESENCE — the flags themselves are
+    absolute contracts, and downtime is gated against the fresh run's
+    own baseline so quick/full tiers compare cleanly."""
+    bad = []
+    for flag, msg in (
+            ("zero_drop", "a mid-flight reprovision dropped or timed "
+                          "out requests (zero-drop contract broke)"),
+            ("token_parity", "resumed outputs diverged from the "
+                             "uninterrupted run (bitwise resume "
+                             "contract broke)"),
+            ("crash_no_loss", "an injected engine kill lost accepted "
+                              "requests"),
+            ("crash_token_parity", "crash-recovered requests emitted "
+                                   "tokens differing from the "
+                                   "uninterrupted run"),
+            ("des_no_drop", "the DES capacity-step transient dropped "
+                            "offered requests")):
+        if not fresh.get(flag, False):
+            bad.append(f"reprovision: {flag} is False — {msg}")
+    rounds = max(fresh.get("rounds_base", 0), 1)
+    downtime = fresh.get("migration_downtime_iters", 0)
+    if downtime > 0.25 * rounds:
+        bad.append(f"reprovision: migration downtime {downtime} iters "
+                   f"> 25% of the {rounds}-round base run (rebuild "
+                   "dominating the drive)")
+    return bad
+
+
 def main(argv) -> int:
-    if len(argv) not in (3, 5, 7, 9, 11):
+    if len(argv) not in (3, 5, 7, 9, 11, 13):
         print(__doc__)
         return 2
     with open(argv[1]) as f:
@@ -272,6 +318,13 @@ def main(argv) -> int:
             fresh_ov = json.load(f)
         bad += compare_overload(committed_ov, fresh_ov)
         records.append(("overload", committed_ov, fresh_ov))
+    if len(argv) >= 13:
+        with open(argv[11]) as f:
+            committed_rp = json.load(f)
+        with open(argv[12]) as f:
+            fresh_rp = json.load(f)
+        bad += compare_reprovision(committed_rp, fresh_rp)
+        records.append(("reprovision", committed_rp, fresh_rp))
     if bad:
         print("BENCH REGRESSION GATE FAILED "
               f"(>{TOLERANCE:.0%} below the committed record):")

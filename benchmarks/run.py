@@ -31,8 +31,8 @@ def main(quick: bool = False) -> None:
                             bench_gamma_surface, bench_k_pool_sweep,
                             bench_overload, bench_paged_kv,
                             bench_planner_latency, bench_prefix_cache,
-                            bench_sharded_serving, bench_speculative,
-                            roofline)
+                            bench_reprovision, bench_sharded_serving,
+                            bench_speculative, roofline)
     t0 = time.time()
     if quick:
         bench_cost_cliff.run()              # paper Table 1 (analytic)
@@ -45,11 +45,12 @@ def main(quick: bool = False) -> None:
         bench_speculative.run(quick=True)   # self-speculative decoding
         bench_burstiness.run(quick=True)    # MMPP arrivals, CI workload
         bench_overload.run(quick=True)      # overload survival, CI stream
+        bench_reprovision.run(quick=True)   # live rebuild + crash recovery
         print(f"\n--quick smoke completed in {time.time() - t0:.1f}s; "
               "CSVs in benchmarks/results/, BENCH_paged_kv.json, "
               "BENCH_prefix_cache.json, BENCH_engine_hotpath.json, "
-              "BENCH_sharded_serving.json, BENCH_speculative.json "
-              "and BENCH_overload.json at root")
+              "BENCH_sharded_serving.json, BENCH_speculative.json, "
+              "BENCH_overload.json and BENCH_reprovision.json at root")
         return
     bench_cost_cliff.run()            # paper Table 1
     bench_borderline.run()            # paper Table 2
@@ -70,6 +71,7 @@ def main(quick: bool = False) -> None:
     bench_engine_hotpath.run()        # beyond-paper: decode dispatch path
     bench_sharded_serving.run()       # beyond-paper: tp-sharded engines
     bench_overload.run()              # beyond-paper: overload survival
+    bench_reprovision.run()           # beyond-paper: live re-provisioning
     if os.path.isdir(roofline.DRYRUN_DIR) and \
             os.listdir(roofline.DRYRUN_DIR):
         roofline.run("16x16")

@@ -72,7 +72,8 @@ def build_fleet_runtime(args):
         paged=args.paged or args.prefix_cache or args.preemption,
         prefix_cache=args.prefix_cache, decode_k=args.decode_k,
         spec_k=args.spec_k, mesh=mesh, tp_degree=args.tp,
-        preemption=args.preemption, max_queue_wait=args.max_queue_wait)
+        preemption=args.preemption, max_queue_wait=args.max_queue_wait,
+        autoscale=getattr(args, "autoscale", False))
     # scale datacenter-token boundaries onto the demo model's cache
     rt = FleetRuntime.from_plan(cfg, params, plan, slots_per_pool=2,
                                 c_chunk=c_chunk,
@@ -307,10 +308,100 @@ async def _smoke_client(gw) -> None:
           "tracks the applied re-plan")
 
 
+async def _chaos_client(gw) -> None:
+    """Fault-injection smoke (DESIGN.md §Live re-provisioning): kill an
+    engine mid-stream and assert the live stream completes with tokens
+    bitwise identical to an unfaulted run (crash recovery migrates the
+    checkpointed request one pool up, SSE cursor intact), the dead pool
+    503s with Retry-After during its blackout, and a post-blackout
+    retry serves the same tokens again."""
+    import asyncio
+    import json
+    from repro.serving.reconfigure import FaultInjector
+    host, port = gw.host, gw.port
+    prompt = "chaos smoke fleet serving " * 4
+    max_tokens = 32
+
+    # unfaulted reference: which pool serves this prompt + its tokens
+    req = json.dumps({"prompt": prompt,
+                      "max_tokens": max_tokens}).encode()
+    status, _, body = await _http_call(host, port, "POST",
+                                       "/v1/completions", req)
+    ref = json.loads(body)
+    assert status == 200, body[:200]
+    ref_ids = ref["choices"][0]["token_ids"]
+    victim = ref["fleetopt"]["pool"]
+
+    # live stream on the victim pool, killed after its first flush
+    sreq = json.dumps({"prompt": prompt, "max_tokens": max_tokens,
+                       "stream": True}).encode()
+    stream_task = asyncio.ensure_future(
+        _http_call(host, port, "POST", "/v1/completions", sreq))
+    tok0, done0 = gw.tokens_streamed, gw.completions_done
+    for _ in range(20_000):
+        if gw.tokens_streamed > tok0:
+            break
+        await asyncio.sleep(0.001)
+    assert gw.tokens_streamed > tok0, "stream never flushed"
+    assert gw.completions_done == done0, "stream finished before kill"
+    async with gw._lock:
+        FaultInjector(gw.runtime).kill(victim)
+    print(f"chaos: killed pool {victim!r} mid-stream")
+
+    # the driver hits EngineDead on its next step and recovers inline;
+    # probe the blackout 503 as soon as the restart counter ticks
+    for _ in range(20_000):
+        if gw.runtime.reprovision_stats["engine_restarts"] >= 1:
+            break
+        await asyncio.sleep(0.001)
+    assert gw.runtime.reprovision_stats["engine_restarts"] >= 1, \
+        "driver never recovered the killed engine"
+    status, headers, body = await _http_call(host, port, "POST",
+                                             "/v1/completions", req)
+    assert status == 503, (status, body[:200])
+    retry_after = int(headers["retry-after"])
+    assert retry_after >= 1, headers
+    err = json.loads(body)["error"]
+    assert err["type"] == "overloaded_error", err
+    print(f"chaos: blackout 503 ok (Retry-After: {retry_after}s)")
+
+    # the killed stream must still deliver EVERY token, bitwise
+    status, _, body = await stream_task
+    assert status == 200, body[:200]
+    chunks, done = _parse_sse(body)
+    streamed = [t for c in chunks
+                if c["choices"][0]["finish_reason"] is None
+                for t in c["choices"][0]["token_ids"]]
+    assert done and streamed == ref_ids, (streamed, ref_ids)
+    final = [c for c in chunks
+             if c["choices"][0]["finish_reason"] is not None][-1]
+    print(f"chaos: killed stream completed bitwise on pool "
+          f"{final['fleetopt']['pool']!r} ({len(streamed)} tokens)")
+
+    # after the blackout the pool serves again — same tokens
+    await asyncio.sleep(retry_after)
+    status, _, body = await _http_call(host, port, "POST",
+                                       "/v1/completions", req)
+    assert status == 200, (status, body[:200])
+    retry_ids = json.loads(body)["choices"][0]["token_ids"]
+    assert retry_ids == ref_ids, (retry_ids, ref_ids)
+    print("chaos: post-blackout retry ok (tokens bitwise identical)")
+
+    status, _, body = await _http_call(host, port, "GET", "/metrics")
+    text = body.decode()
+    for needle in ("fleetopt_engine_restarts_total",
+                   "fleetopt_migrated_requests_total"):
+        line = [ln for ln in text.splitlines()
+                if ln.startswith(needle)][0]
+        assert float(line.split()[-1]) >= 1, line
+    print("chaos: /metrics ok (restart + migration counters visible)")
+
+
 def serve_http(args) -> None:
     """Run the asyncio gateway over a planned fleet: ``--http PORT``
     serves until killed; ``--smoke`` binds an ephemeral port, runs the
-    in-process client against it and exits nonzero on any failure."""
+    in-process client against it and exits nonzero on any failure
+    (``--chaos`` adds the fault-injection pass)."""
     import asyncio
 
     from repro.serving.replanner import Replanner
@@ -321,15 +412,20 @@ def serve_http(args) -> None:
           f"gammas={rt.router.gammas} "
           f"contexts={[e.c_max for e in rt.engines.values()]}")
     rp = Replanner(rt, min_observed=4, n_samples=2048)
+    # chaos needs a blackout window long enough for the in-process
+    # client to observe the 503 between recovery and its probe
     gw = ServingGateway(rt, replanner=rp, port=0 if args.smoke
                         else args.http,
-                        replan_interval_s=args.replan_interval)
+                        replan_interval_s=args.replan_interval,
+                        blackout_s=3.0 if args.chaos else 0.25)
 
     async def smoke():
         await gw.start()
         print(f"smoke gateway on {gw.host}:{gw.port}")
         try:
             await _smoke_client(gw)
+            if args.chaos:
+                await _chaos_client(gw)
         finally:
             await gw.stop()
 
@@ -420,6 +516,17 @@ def main():
                          "in-process smoke client against every "
                          "endpoint (streaming parity, metrics parse, "
                          "forced re-plan) and exit nonzero on failure")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --smoke: also kill one engine mid-stream "
+                         "via the fault injector and assert the stream "
+                         "completes bitwise after crash recovery, the "
+                         "dead pool 503s with Retry-After during its "
+                         "blackout, and a post-blackout retry matches")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="--fleet engines may be LIVE-REBUILT by the "
+                         "re-planner when a tick's context/GPU-count "
+                         "delta exceeds its hysteresis (zero-drop KV "
+                         "migration; DESIGN.md §Live re-provisioning)")
     ap.add_argument("--replan-interval", type=float, default=None,
                     metavar="SECONDS",
                     help="run a re-planner tick every S seconds "

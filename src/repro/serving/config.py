@@ -61,6 +61,9 @@ class ServingConfig:
       short); ``lout_routing`` lets the gateway route by predicted
       rather than worst-case output length, clamping the generation
       budget to the chosen pool's context (token-budget routing).
+    * live re-provisioning (§Live re-provisioning & fault injection):
+      ``autoscale`` arms the re-planner's hardware path — tick deltas
+      beyond hysteresis trigger ``FleetRuntime.reprovision``.
     """
 
     # -- engine step shape -------------------------------------------------
@@ -87,6 +90,12 @@ class ServingConfig:
     # -- output-length awareness -------------------------------------------
     lout_reservation: bool = False
     lout_routing: bool = False
+    # -- live re-provisioning (§Live re-provisioning & fault injection) ----
+    # let the re-planner ACT on context/GPU-count recommendations
+    # beyond its hysteresis threshold by live-rebuilding pools
+    # (FleetRuntime.reprovision: zero-drop KV migration) instead of
+    # only reporting them
+    autoscale: bool = False
 
     def __post_init__(self):
         def bad(msg):

@@ -136,6 +136,13 @@ def prefill_buckets(c_chunk: int, min_bucket: int = 8) -> Tuple[int, ...]:
     return tuple(buckets)
 
 
+class EngineDead(RuntimeError):
+    """The engine's device state is gone (injected crash / allocator
+    exhaustion fault). Host-side bookkeeping (queue, emitted-token
+    mirrors, host-offload KV tier) survives — reconfigure.salvage_states
+    reads it to migrate every accepted request to a healthy pool."""
+
+
 @dataclasses.dataclass
 class ServeRequest:
     rid: int
@@ -368,6 +375,12 @@ class InferenceEngine:
                                "swapped_in": 0, "recomputed": 0,
                                "swapped_blocks": 0, "shed": 0,
                                "hol_bypass": 0, "reservation_breach": 0}
+        # -- fault injection (DESIGN.md §Live re-provisioning) -------------
+        # None = healthy. "killed"/"oom" make the next device touch
+        # raise EngineDead; "wedged" makes step() return without
+        # advancing the iteration clock (a stall the gateway's health
+        # policy detects). Set only by reconfigure.FaultInjector.
+        self._fault: Optional[str] = None
         # -- output-length-aware reservation (DESIGN.md §Serving API) ------
         # opt-in: paged admission reserves the request's PREDICTED
         # footprint (l_out_hint) instead of its max_new_tokens worst
@@ -709,6 +722,13 @@ class InferenceEngine:
         The iteration clock advances by the number of model iterations
         the dispatch performed (decode_k for a scan), never by
         dispatches."""
+        if self._fault == "killed":
+            raise EngineDead(f"engine fault injected: {self._fault}")
+        if self._fault == "wedged":
+            # a wedged step consumes wall time but never advances the
+            # iteration clock — exactly the signature HealthPolicy keys
+            # on (busy engine, frozen iteration counter)
+            return
         it0, done0 = self.iteration, self._completed_total
         self.iteration += 1
         self._admit()
@@ -816,6 +836,13 @@ class InferenceEngine:
         """Pop a free block; when the free list is dry, evict the
         least-recently-released cached prefix block (its hash leaves
         the prefix map — the content is about to be overwritten)."""
+        if self._fault == "oom":
+            # injected allocator exhaustion: a real fleet hits this when
+            # HBM is lost (ECC fault, partial device loss). Raised from
+            # INSIDE the allocator, so counters the caller already
+            # decremented stay inconsistent — salvage reads host mirrors
+            # only and never trusts this engine's allocator again.
+            raise EngineDead("engine fault injected: allocator exhausted")
         if self._free:
             return self._free.pop()
         phys, _ = self._cached_free.popitem(last=False)
@@ -1106,6 +1133,64 @@ class InferenceEngine:
         self._dev_dirty = True
         if self.paged:
             self._release_slot(s)
+
+    def _checkpoint_prefilling(self, s: int, requeue_index: int = 0) -> None:
+        """Checkpoint a MID-PREFILL slot onto the recompute path (the
+        swap tier is pointless here: the KV written so far is a strict
+        prefix of what replay re-prefills anyway, and a partial chunk's
+        blocks may not even be full). The replay list is rebuilt from
+        the ORIGINAL request — not the possibly-already-a-replay the
+        slot was prefilling — so checkpointing a resumed request twice
+        stays idempotent."""
+        req = self.slot_req[s]
+        assert req is not None and self.slot_prefill_left[s], \
+            "can only checkpoint-prefill a mid-prefill slot"
+        out = list(self.slot_out[s])
+        replay = list(req.tokens) if not out else \
+            list(req.tokens) + [req.tokens[-1]] + out[:-1]
+        # a resumed replay parked the true next fed token in
+        # _resume_last_tok; a fresh prefill's next fed token is the last
+        # prompt token, which is also replay[-1]
+        last = self._resume_last_tok.pop(req.rid, None)
+        if last is None:
+            last = int(replay[-1]) if replay else 0
+        self._preempted[req.rid] = _PreemptedState(
+            req=req, out=out, pos=0, last_tok=int(last), replay=replay,
+            host_kv=None, n_blocks=0)
+        self.overload_stats["preempted"] += 1
+        self.overload_stats["recomputed"] += 1
+        self._rid_preemptions[req.rid] = \
+            self._rid_preemptions.get(req.rid, 0) + 1
+        self.waiting.insert(min(requeue_index, len(self.waiting)), req)
+        self._enqueued_at[req.rid] = self.iteration
+        self.slot_req[s] = None
+        self.slot_out[s] = []
+        self.slot_pos[s] = 0
+        self.slot_prefill_left[s] = []
+        self._dev_dirty = True
+        if self.paged:
+            self._release_slot(s)
+
+    def drain_checkpoint(self, mode: Optional[str] = None) -> int:
+        """Checkpoint EVERY occupied slot into the host tier and
+        requeue in slot order AHEAD of already-waiting requests — the
+        quiesce step of a live re-provision (DESIGN.md §Live
+        re-provisioning). Decoding slots go through preempt_slot (swap
+        vs recompute by the cold-suffix threshold, or forced by
+        ``mode``); mid-prefill slots are recompute-checkpointed.
+        Returns the number of requests checkpointed; afterwards the
+        engine holds no slot state and waiting[0:count] are the
+        checkpointed requests in slot order."""
+        count = 0
+        for s in range(self.n_max):
+            if self.slot_req[s] is None:
+                continue
+            if self.slot_prefill_left[s]:
+                self._checkpoint_prefilling(s, requeue_index=count)
+            else:
+                self.preempt_slot(s, mode=mode, requeue_index=count)
+            count += 1
+        return count
 
     def _swap_out(self, s: int):
         """Device->host copy of slot ``s``'s KV: exactly its

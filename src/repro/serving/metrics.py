@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Tuple
 
 _ESCAPES = str.maketrans({"\\": r"\\", "\n": r"\n", '"': r'\"'})
@@ -145,6 +146,31 @@ def fleet_metrics(runtime) -> List[Metric]:
             per_pool["prefix_hit_blocks"].add(hit, pool=name)
             per_pool["prefix_hit_rate"].add(
                 hit / (hit + alloc) if hit + alloc else 0.0, pool=name)
+    # -- live re-provisioning / fault recovery (§Live re-provisioning) -----
+    reprov: List[Metric] = []
+    rstats = getattr(runtime, "reprovision_stats", None)
+    if rstats is not None:
+        for key, help_ in (
+                ("rebuilds", "Planned live engine rebuilds "
+                             "(reprovision calls)"),
+                ("engine_restarts", "Engines rebuilt after a crash "
+                                    "(fault recovery)"),
+                ("migrated_requests", "In-flight/queued requests "
+                                      "migrated across engine rebuilds"),
+                ("rerouted_requests", "Migrated requests re-routed to a "
+                                      "different pool"),
+                ("autoscale_actions", "Re-planner recommendations acted "
+                                      "on by the autoscaler"),
+        ):
+            reprov.append(Metric(f"fleetopt_{key}_total", "counter",
+                                 help_).add(rstats[key]))
+        down = Metric("fleetopt_pool_down", "gauge",
+                      "1 while the pool refuses submissions "
+                      "(crash-recovery blackout window)")
+        for name in runtime.engines:
+            until = getattr(runtime, "pool_down_until", {}).get(name, 0.0)
+            down.add(1.0 if until > time.monotonic() else 0.0, pool=name)
+        reprov.append(down)
     st = runtime.router.stats
     router = [
         Metric("fleetopt_requests_routed_total", "counter",
@@ -169,4 +195,5 @@ def fleet_metrics(runtime) -> List[Metric]:
         router[4].add(b, index=str(i))
     for i, g in enumerate(runtime.router.gammas):
         router[5].add(g, index=str(i))
-    return (list(per_pool.values()) + list(overload.values()) + router)
+    return (list(per_pool.values()) + list(overload.values()) + reprov
+            + router)

@@ -16,6 +16,7 @@ from a :class:`~repro.core.planner.FleetPlan`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
@@ -53,6 +54,10 @@ class GatewayResponse:
     queue_iters: int
     shed: bool = False             # refused by stability-aware admission
     preemptions: int = 0
+    # still in flight when run() hit its iteration cap: output_tokens
+    # holds the partial prefix emitted so far, and the request stays
+    # live on its engine (a later run() can still finish it)
+    timed_out: bool = False
 
 
 class FleetRuntime:
@@ -136,8 +141,22 @@ class FleetRuntime:
                 config=scfg.replace(mesh=self._submeshes[i],
                                     tp_degree=1))
             for i in range(k)}
+        # pristine host params, kept for live re-provisioning: engine
+        # rebuilds re-shard from these instead of re-gathering a dead
+        # or differently-sharded engine's device copy
+        self.params = params
         self._decisions: Dict[int, RoutingDecision] = {}
         self._categories: Dict[int, str] = {}
+        # -- live re-provisioning (DESIGN.md §Live re-provisioning) --------
+        self.reprovision_stats = {"rebuilds": 0, "engine_restarts": 0,
+                                  "migrated_requests": 0,
+                                  "rerouted_requests": 0,
+                                  "autoscale_actions": 0}
+        # pool -> monotonic deadline while crash recovery blacks it out
+        self.pool_down_until: Dict[str, float] = {}
+        # per-pool GPU counts of the plan this fleet was provisioned
+        # from (from_plan sets it); the autoscaler's hysteresis baseline
+        self.plan_pool_gpus: Optional[List[int]] = None
         # demo-tokens per datacenter-token when from_plan shrank the
         # boundaries onto a reduced model (1.0 = native scale); the
         # re-planner uses it to plan at datacenter scale where the
@@ -182,6 +201,7 @@ class FleetRuntime:
                  c_maxes, c_chunk, config=config,
                  lout_predictor=lout_predictor, **overrides)
         rt.ctx_scale = scale
+        rt.plan_pool_gpus = [pp.n_gpus for pp in plan.pools]
         return rt
 
     def submit(self, req: GatewayRequest) -> RoutingDecision:
@@ -202,6 +222,14 @@ class FleetRuntime:
                     prompt_bytes=len(req.text.encode("utf-8")))
         decision = self.router.route(r, prompt_text=req.text,
                                      session=req.session)
+        if decision.pool in self.pool_down_until:
+            left = self.pool_down_until[decision.pool] - time.monotonic()
+            if left > 0:
+                # crash-recovery blackout: refuse with the wait the
+                # gateway maps to 503 + Retry-After
+                from repro.serving.reconfigure import PoolDownError
+                raise PoolDownError(decision.pool, left)
+            del self.pool_down_until[decision.pool]
         text = decision.compressed_text if decision.compressed else req.text
         ids = self.tokenizer.encode(text)
         max_new = req.max_output_tokens
@@ -236,14 +264,55 @@ class FleetRuntime:
                                        len(res.output_tokens),
                                        category=self._categories.get(rid))
 
+    def reprovision(self, pool: str, *, n_max: Optional[int] = None,
+                    c_max: Optional[int] = None,
+                    tp: Optional[int] = None) -> Dict[str, object]:
+        """Live-rebuild one pool's engine with a new slot count /
+        context / tp submesh, migrating every in-flight request through
+        the host-offload tier — zero-drop, bitwise-identical resume
+        (DESIGN.md §Live re-provisioning)."""
+        from repro.serving import reconfigure
+        return reconfigure.reprovision(self, pool, n_max=n_max,
+                                       c_max=c_max, tp=tp)
+
+    def release(self, rid: int) -> None:
+        """Drop every host-side record of a CONSUMED request — the
+        engine's result entry and the gateway's routing/category
+        entries. Without this a days-long serving process leaks one
+        dict entry per request served (ISSUE 10); the gateway calls it
+        after flushing a result, run() after building its response."""
+        for eng in self.engines.values():
+            eng.results.pop(rid, None)
+        self._decisions.pop(rid, None)
+        self._categories.pop(rid, None)
+
+    def _response(self, rid: int, res: ServeResult,
+                  timed_out: bool = False) -> GatewayResponse:
+        d = self._decisions[rid]
+        return GatewayResponse(
+            rid=rid, pool=d.pool, compressed=d.compressed,
+            compression_ms=d.compression_ms,
+            output_tokens=res.output_tokens,
+            prefill_iters=res.prefill_iters,
+            decode_iters=res.decode_iters, queue_iters=res.queue_iters,
+            shed=res.shed, preemptions=res.preemptions,
+            timed_out=timed_out)
+
     def run(self, max_iters: int = 100_000) -> Dict[int, GatewayResponse]:
         """Drive all pools to completion, interleaving their lockstep
         iterations (the pools are independent engines, so interleaving
         cannot change any request's tokens — but it models the real
         deployment, where all pools serve concurrently, and keeps
-        per-pool iteration clocks comparable)."""
+        per-pool iteration clocks comparable).
+
+        Finished requests are consumed (their host-dict entries evicted
+        via :meth:`release`, so repeated waves don't grow host memory).
+        Requests still in flight when the iteration cap hits are
+        surfaced as ``timed_out=True`` responses carrying their partial
+        tokens — previously they silently vanished from the returned
+        dict — and stay live on their engines, so a later ``run()`` can
+        still finish them."""
         out: Dict[int, GatewayResponse] = {}
-        results: Dict[int, ServeResult] = {}
         busy = True
         while busy:
             busy = False
@@ -252,17 +321,37 @@ class FleetRuntime:
                     eng.step()
                     busy = True
         for eng in self.engines.values():
-            results.update(eng.results)
-        for rid, res in results.items():
-            self.record_completion(rid, res)
-            d = self._decisions[rid]
-            out[rid] = GatewayResponse(
-                rid=rid, pool=d.pool, compressed=d.compressed,
-                compression_ms=d.compression_ms,
-                output_tokens=res.output_tokens,
-                prefill_iters=res.prefill_iters,
-                decode_iters=res.decode_iters, queue_iters=res.queue_iters,
-                shed=res.shed, preemptions=res.preemptions)
+            for rid, res in list(eng.results.items()):
+                self.record_completion(rid, res)
+                out[rid] = self._response(rid, res)
+                self.release(rid)
+        # iteration cap hit with work still in flight (overload, a
+        # wedged engine, or a too-small max_iters): report the partial
+        # state honestly instead of dropping the requests on the floor
+        for eng in self.engines.values():
+            for s in range(eng.n_max):
+                req = eng.slot_req[s]
+                if req is None or req.rid in out:
+                    continue
+                out[req.rid] = self._response(req.rid, ServeResult(
+                    rid=req.rid, output_tokens=list(eng.slot_out[s]),
+                    prefill_iters=eng._prefill_iters.get(req.rid, 0),
+                    decode_iters=len(eng.slot_out[s]),
+                    queue_iters=eng._queue_iters.get(req.rid, 0),
+                    preemptions=eng._rid_preemptions.get(req.rid, 0)),
+                    timed_out=True)
+            for req in eng.waiting:
+                if req.rid in out:
+                    continue
+                st = eng._preempted.get(req.rid)
+                out[req.rid] = self._response(req.rid, ServeResult(
+                    rid=req.rid,
+                    output_tokens=list(st.out) if st else [],
+                    prefill_iters=eng._prefill_iters.get(req.rid, 0),
+                    decode_iters=len(st.out) if st else 0,
+                    queue_iters=eng._queue_iters.get(req.rid, 0),
+                    preemptions=eng._rid_preemptions.get(req.rid, 0)),
+                    timed_out=True)
         return out
 
 

@@ -14,8 +14,11 @@ what can be applied in software:
   deltas** — cannot be applied without re-provisioning engines (pool
   i's KV cache was sized for its old boundary), so they are clamped
   and surfaced as a ``recommendation`` in the tick report (and in
-  /metrics via ``fleetopt_replan_recommendation``); an operator (or an
-  autoscaler) acts on them out of band.
+  /metrics via ``fleetopt_replan_recommendation``). With
+  ``ServingConfig.autoscale`` on, deltas beyond a hysteresis threshold
+  are ACTED on instead: ``runtime.reprovision`` live-rebuilds the pool
+  (zero-drop KV migration, DESIGN.md §Live re-provisioning); otherwise
+  an operator acts on the recommendation out of band.
 
 This split is the paper's own deployment story: B* is enforced in
 software at the gateway, capacity is provisioned hardware.
@@ -45,9 +48,15 @@ class Replanner:
                  t_slo: float = 0.5, profile=A100_LLAMA70B,
                  min_observed: int = 32, decay: float = 0.7,
                  n_samples: int = 4096, rho_max: Optional[float] = None,
-                 plan_scale: Optional[float] = None):
+                 plan_scale: Optional[float] = None,
+                 autoscale_hysteresis: float = 0.25):
         self.runtime = runtime
         self.lam = lam
+        # relative delta a context/GPU-count recommendation must exceed
+        # before the autoscaler (ServingConfig.autoscale) acts on it —
+        # re-provisioning checkpoints every in-flight request, so small
+        # oscillating deltas must not thrash engines every tick
+        self.autoscale_hysteresis = float(autoscale_hysteresis)
         # hardware profiles are calibrated at datacenter token scale;
         # a ctx_scale-shrunk demo runtime observes demo tokens, so the
         # planner runs on lengths * plan_scale and its boundary vector
@@ -135,6 +144,14 @@ class Replanner:
         report["plan_total_gpus"] = plan.total_gpus
         report["plan_annual_cost"] = plan.annual_cost
         report["plan_boundaries"] = list(plan.boundaries)
+        # --- hardware-applicable part (ServingConfig.autoscale): act
+        # on context/GPU-count deltas beyond the hysteresis threshold
+        # by LIVE-REBUILDING the pool (reconfigure.reprovision —
+        # zero-drop, bitwise resume), turning what used to be a dropped
+        # recommendation into an action. Runs before the boundary
+        # clamp so a grown context admits its new boundary this tick.
+        report["autoscale_actions"] = self._autoscale(plan, sc)
+        engines = list(self.runtime.engines.values())
         # --- software-applicable part: clamp each boundary to its
         # pool's provisioned context (pool i's KV cache holds at most
         # c_max tokens — routing past that breaks the no-OOM guarantee)
@@ -174,3 +191,53 @@ class Replanner:
         self.hist.decay(self.decay_factor)
         self.last_report = report
         return report
+
+    # ------------------------------------------------------- autoscale
+    def _autoscale(self, plan, sc: float) -> List[str]:
+        """Apply the plan's re-provisioning deltas to the live fleet
+        when ``ServingConfig.autoscale`` is on. Context: a plan
+        boundary more than ``autoscale_hysteresis`` above a pool's
+        provisioned c_max grows that pool. Slots: a plan GPU count
+        drifting beyond the hysteresis band from the PROVISIONED
+        baseline (from_plan's per-pool GPU counts) rescales the pool's
+        local slot count proportionally. Each action is one
+        ``runtime.reprovision`` call — in-flight requests migrate
+        through the host-offload tier, nothing drops."""
+        rt = self.runtime
+        if not getattr(getattr(rt, "config", None), "autoscale", False) \
+                or not hasattr(rt, "reprovision"):
+            return []
+        hyst = 1.0 + self.autoscale_hysteresis
+        names = list(rt.engines)
+        actions: List[str] = []
+        for i, b_plan in enumerate(plan.boundaries):
+            b = max(1, int(round(b_plan / sc)))
+            cap = rt.engines[names[i]].c_max
+            if b > cap * hyst:
+                rt.reprovision(names[i], c_max=b)
+                actions.append(f"grow {names[i]} c_max {cap} -> {b}")
+        plan_gpus = [pp.n_gpus for pp in plan.pools]
+        base = rt.plan_pool_gpus
+        if base is None:
+            # no provisioning baseline recorded: adopt this plan's and
+            # only act on later drift
+            rt.plan_pool_gpus = list(plan_gpus)
+        else:
+            for i, name in enumerate(names[:len(plan_gpus)]):
+                if i >= len(base) or base[i] <= 0:
+                    continue
+                ratio = plan_gpus[i] / base[i]
+                if 1.0 / hyst <= ratio <= hyst:
+                    continue
+                eng = rt.engines[name]
+                new_n = max(1, int(round(eng.n_max * ratio)))
+                if new_n != eng.n_max:
+                    rt.reprovision(name, n_max=new_n)
+                    actions.append(f"rescale {name} n_max {eng.n_max} "
+                                   f"-> {new_n} (plan wants "
+                                   f"{plan_gpus[i]} vs provisioned "
+                                   f"{base[i]} GPUs)")
+                base[i] = plan_gpus[i]
+        if actions:
+            rt.reprovision_stats["autoscale_actions"] += len(actions)
+        return actions

@@ -40,8 +40,11 @@ import json
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.serving.engine import EngineDead
 from repro.serving.metrics import Metric, fleet_metrics, render_prometheus
 from repro.serving.pools import FleetRuntime, GatewayRequest
+from repro.serving.reconfigure import (HealthPolicy, PoolDownError,
+                                       recover_pool)
 from repro.serving.replanner import Replanner
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
@@ -51,13 +54,17 @@ _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
 
 
 class RequestError(Exception):
-    """Maps straight to a structured 4xx JSON body."""
+    """Maps straight to a structured 4xx/5xx JSON body.
+    ``retry_after`` (seconds) adds a Retry-After header — the 503
+    contract during a crash-recovery blackout window."""
 
     def __init__(self, status: int, message: str,
                  etype: str = "invalid_request_error",
-                 param: Optional[str] = None):
+                 param: Optional[str] = None,
+                 retry_after: Optional[float] = None):
         super().__init__(message)
         self.status = status
+        self.retry_after = retry_after
         self.body = {"error": {"message": message, "type": etype,
                                "param": param, "code": None}}
 
@@ -87,9 +94,17 @@ class ServingGateway:
                  replan_interval_s: Optional[float] = None,
                  request_timeout_s: float = 300.0,
                  max_body_bytes: int = 1 << 20,
-                 idle_sleep_s: float = 0.005):
+                 idle_sleep_s: float = 0.005,
+                 health_policy: Optional[HealthPolicy] = None,
+                 blackout_s: float = 0.25):
         self.runtime = runtime
         self.replanner = replanner
+        # stall detector + crash-recovery blackout (DESIGN.md §Live
+        # re-provisioning): a dead/wedged engine is rebuilt in-line by
+        # the drive loop; its pool refuses NEW submissions (503 +
+        # Retry-After) for blackout_s while salvaged requests migrate
+        self.health = health_policy or HealthPolicy()
+        self.blackout_s = blackout_s
         self.host = host
         self.port = port
         self.model_name = model_name or runtime.cfg.name
@@ -154,23 +169,67 @@ class ServingGateway:
         loop = asyncio.get_running_loop()
         while self._running:
             async with self._lock:
-                busy = [e for e in self.runtime.engines.values()
+                busy = [n for n, e in self.runtime.engines.items()
                         if e.busy()]
-                for eng in busy:
-                    await loop.run_in_executor(None, eng.step)
+                for name in busy:
+                    eng = self.runtime.engines[name]
+                    try:
+                        await loop.run_in_executor(None, eng.step)
+                    except EngineDead:
+                        self._recover(name)
+                # wedged engines don't raise — their iteration clock
+                # just stops advancing while busy; the health policy
+                # spots the stall and the recovery path is identical
+                for name in self.health.check(self.runtime):
+                    self._recover(name)
                 if self._pending:
                     self._flush()
             # yield to handlers; sleep longer when idle
             await asyncio.sleep(0 if busy else self.idle_sleep_s)
 
+    def _recover(self, name: str) -> None:
+        """Crash recovery under the gateway lock: salvage the dead
+        engine's accepted requests from host mirrors, rebuild it, and
+        migrate them one pool up (reconfigure.recover_pool). Live
+        streams keep their SSE cursors — slot_out prefixes survive in
+        the checkpoints — so clients see a pause, never a token gap."""
+        recover_pool(self.runtime, name, blackout_s=self.blackout_s)
+        for rid, st in self._pending.items():
+            d = self.runtime._decisions.get(rid)
+            if d is not None and d.pool != st.pool:
+                st.pool = d.pool
+
+    def _locate(self, rid: int, st: _Stream):
+        """Engine currently holding ``rid`` (result, slot or queue).
+        Prefers the recorded pool; a re-provision/recovery may have
+        migrated the request, so fall back to scanning the fleet and
+        re-pin the stream to wherever it landed."""
+        def holds(eng) -> bool:
+            return (rid in eng.results
+                    or any(r is not None and r.rid == rid
+                           for r in eng.slot_req)
+                    or any(r.rid == rid for r in eng.waiting))
+        eng = self.runtime.engines.get(st.pool)
+        if eng is not None and holds(eng):
+            return eng
+        for name, eng in self.runtime.engines.items():
+            if holds(eng):
+                st.pool = name
+                return eng
+        return None
+
     def _flush(self) -> None:
         """Move newly-synced tokens from engine slot buffers to stream
         queues. slot_out is append-only for a live request (preemption
         checkpoints preserve the emitted prefix), so the flushed-count
-        cursor is stable across swaps/recomputes/HOL reshuffles."""
+        cursor is stable across swaps/recomputes/HOL reshuffles — and
+        across engine rebuilds, whose checkpoints carry the same
+        emitted-token prefix."""
         for rid in list(self._pending):
             st = self._pending[rid]
-            eng = self.runtime.engines[st.pool]
+            eng = self._locate(rid, st)
+            if eng is None:
+                continue
             res = eng.results.get(rid)
             if res is None:
                 for s, req in enumerate(eng.slot_req):
@@ -197,6 +256,10 @@ class ServingGateway:
             self.completions_done += 1
             st.queue.put_nowait(("done", res))
             del self._pending[rid]
+            # evict the consumed request's host-dict entries (engine
+            # result + routing/category records) — the long-running
+            # path must stay flat in memory (ISSUE 10)
+            self.runtime.release(rid)
 
     async def _replan_loop(self) -> None:
         while self._running:
@@ -214,7 +277,12 @@ class ServingGateway:
             status = await self._route(method, path, body, writer)
         except RequestError as e:
             status = e.status
-            self._write_json(writer, e.status, e.body)
+            extra = {}
+            if e.retry_after is not None:
+                # ceil: "Retry-After: 0" would tell clients to hammer a
+                # pool that is still mid-blackout
+                extra["Retry-After"] = str(max(1, int(e.retry_after + 1)))
+            self._write_json(writer, e.status, e.body, extra)
         except (asyncio.IncompleteReadError, asyncio.LimitOverrunError,
                 ConnectionError, asyncio.TimeoutError):
             status = 400
@@ -331,10 +399,16 @@ class ServingGateway:
                      prompt_tokens=self.runtime.tokenizer.count(
                          p["prompt"]))
         async with self._lock:
-            decision = self.runtime.submit(GatewayRequest(
-                rid=rid, text=p["prompt"],
-                max_output_tokens=p["max_tokens"],
-                category=p["category"], session=p["session"]))
+            try:
+                decision = self.runtime.submit(GatewayRequest(
+                    rid=rid, text=p["prompt"],
+                    max_output_tokens=p["max_tokens"],
+                    category=p["category"], session=p["session"]))
+            except PoolDownError as e:
+                raise RequestError(
+                    503, f"{e} (pool rebuilding after a fault)",
+                    etype="overloaded_error",
+                    retry_after=e.retry_after) from None
             st.pool = decision.pool
             st.l_in_effective = decision.l_in_effective
             self._pending[rid] = st
@@ -487,17 +561,20 @@ class ServingGateway:
         return out
 
     # ----------------------------------------------------- raw writers
-    def _write_raw(self, writer, status: int, ctype: str,
-                   body: bytes) -> None:
+    def _write_raw(self, writer, status: int, ctype: str, body: bytes,
+                   extra_headers: Optional[Dict[str, str]] = None) -> None:
+        extra = "".join(f"{k}: {v}\r\n"
+                        for k, v in (extra_headers or {}).items())
         writer.write(
             f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
             f"Content-Type: {ctype}\r\n"
-            f"Content-Length: {len(body)}\r\n"
+            f"Content-Length: {len(body)}\r\n{extra}"
             f"Connection: close\r\n\r\n".encode("latin-1") + body)
 
-    def _write_json(self, writer, status: int, obj: dict) -> None:
+    def _write_json(self, writer, status: int, obj: dict,
+                    extra_headers: Optional[Dict[str, str]] = None) -> None:
         self._write_raw(writer, status, "application/json",
-                        json.dumps(obj).encode())
+                        json.dumps(obj).encode(), extra_headers)
 
     @staticmethod
     def _write_sse(writer, obj: dict) -> None:

@@ -52,6 +52,7 @@ class PoolStats:
     thin_frac: float
     shed: int = 0             # refused by stability-aware admission
     preempted: int = 0        # slot preemptions (overload survival)
+    migrated: int = 0         # in-service at a live re-provisioning step
 
     @property
     def goodput_frac(self) -> float:
@@ -78,7 +79,10 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
                   n_gpus: int = 0, thin_frac: float = 1.0,
                   max_queue_wait: Optional[float] = None,
                   preempt: bool = False,
-                  swap_s: float = 0.0) -> PoolStats:
+                  swap_s: float = 0.0,
+                  reconfig_at: Optional[float] = None,
+                  reconfig_slots: Optional[int] = None,
+                  migration_s: float = 0.0) -> PoolStats:
     """Event-driven M/G/c slot simulation for one pool (FIFO).
 
     Overload-survival extensions (DESIGN.md §Overload survival; both
@@ -93,13 +97,25 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
         victim policy); the victim resumes at the queue FRONT with its
         remaining service plus ``2 * swap_s`` (swap-out + swap-in).
         Each request is preempted at most once (anti-thrash).
+
+    Live re-provisioning transient (DESIGN.md §Live re-provisioning;
+    the DES mirror of ``FleetRuntime.reprovision``; default OFF):
+
+      * ``reconfig_at`` / ``reconfig_slots``: at the first event time
+        >= ``reconfig_at`` the pool's capacity steps to
+        ``reconfig_slots``. Every in-service request is checkpointed —
+        it resumes at the queue FRONT (in arrival order, ahead of
+        queued work, exactly the engine's restore order) with its
+        remaining service plus ``migration_s`` (the swap-out +
+        swap-in + rebuild penalty per request). Nothing is dropped;
+        the transient shows up as a wait/TTFT bump around the step.
     """
     from collections import deque
     n = len(arrivals)
     service = (np.ceil(l_in / c_chunk) + l_out) * t_iter
     prefill = np.ceil(l_in / c_chunk) * t_chunk
     starts = np.empty(n)
-    if max_queue_wait is None and not preempt:
+    if max_queue_wait is None and not preempt and reconfig_at is None:
         busy_heap: list = []  # completion times of in-service requests
         queue: deque = deque()  # FIFO of waiting request indices
         for i in range(n):
@@ -121,11 +137,15 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
             j = queue.popleft()
             starts[j] = tc
             heapq.heappush(busy_heap, tc + service[j])
-        shed_count = preempt_count = 0
+        shed_count = preempt_count = migrated = 0
         shed_mask = np.zeros(n, bool)
     else:
-        starts, shed_mask, shed_count, preempt_count = _simulate_overload(
-            arrivals, service, c_slots, max_queue_wait, preempt, swap_s)
+        (starts, shed_mask, shed_count, preempt_count,
+         migrated) = _simulate_overload(
+            arrivals, service, c_slots, max_queue_wait, preempt, swap_s,
+            reconfig_at, reconfig_slots, migration_s)
+        if reconfig_slots is not None:
+            c_slots = max(c_slots, reconfig_slots)   # utilization denom
 
     # Busy-time accounting (documented invariant): the measurement
     # window is [warmup, last arrival] — the interval where the pool is
@@ -150,16 +170,20 @@ def simulate_pool(arrivals: np.ndarray, l_in: np.ndarray, l_out: np.ndarray,
                      busy_time=busy_time, horizon=t1 - t0,
                      waits=waits[mask], ttfts=ttfts[mask],
                      thin_frac=thin_frac, shed=shed_count,
-                     preempted=preempt_count)
+                     preempted=preempt_count, migrated=migrated)
 
 
 def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
                        c_slots: int, max_queue_wait: Optional[float],
-                       preempt: bool, swap_s: float):
-    """Slot simulation with shedding and/or preemption — the DES mirror
-    of the engine's overload policy (see simulate_pool's docstring).
-    Returns (starts, shed_mask, shed_count, preempt_count); a shed
-    request's start is +inf."""
+                       preempt: bool, swap_s: float,
+                       reconfig_at: Optional[float] = None,
+                       reconfig_slots: Optional[int] = None,
+                       migration_s: float = 0.0):
+    """Slot simulation with shedding, preemption and/or a live
+    re-provisioning capacity step — the DES mirror of the engine's
+    overload + reconfiguration policies (see simulate_pool's
+    docstring). Returns (starts, shed_mask, shed_count, preempt_count,
+    migrated); a shed request's start is +inf."""
     from collections import deque
     n = len(arrivals)
     es_mean = float(service.mean()) if n else 0.0
@@ -174,6 +198,7 @@ def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
     n_busy = 0
     shed_mask = np.zeros(n, bool)
     preempt_count = 0
+    migrated = 0
 
     def start(j, t):
         nonlocal n_busy
@@ -197,8 +222,32 @@ def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
             if queue:
                 start(queue.popleft(), tc)
 
+    def reconfigure(t_rc):
+        # live re-provisioning step: checkpoint every in-service
+        # request (remaining service + per-request migration penalty),
+        # requeue them at the FRONT in arrival order — ahead of queued
+        # work, the engine's restore order — then restart into the new
+        # slot count. Planned migration does not consume the
+        # anti-thrash preemption budget.
+        nonlocal n_busy, c_slots, migrated
+        drain(t_rc)
+        live = [j for j in range(n) if in_service[j]]
+        for j in reversed(live):
+            in_service[j] = False
+            rem[j] = cur_tc[j] - t_rc + migration_s
+            queue.appendleft(j)
+        migrated = len(live)
+        n_busy = 0
+        if reconfig_slots is not None:
+            c_slots = reconfig_slots
+        while queue and n_busy < c_slots:
+            start(queue.popleft(), t_rc)
+
     for i in range(n):
         t = arrivals[i]
+        if reconfig_at is not None and t >= reconfig_at:
+            reconfigure(reconfig_at)
+            reconfig_at = None
         drain(t)
         if n_busy < c_slots:
             start(i, t)
@@ -236,6 +285,11 @@ def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
                 start(i, t)
                 continue
         queue.append(i)
+    # a reconfiguration scheduled after the last arrival still fires:
+    # its transient lands on the backlog drain
+    if reconfig_at is not None:
+        reconfigure(reconfig_at)
+        reconfig_at = None
     # drain the backlog
     while queue:
         if not comp_heap:
@@ -246,7 +300,7 @@ def _simulate_overload(arrivals: np.ndarray, service: np.ndarray,
         in_service[j] = False
         n_busy -= 1
         start(queue.popleft(), tc)
-    return starts, shed_mask, int(shed_mask.sum()), preempt_count
+    return starts, shed_mask, int(shed_mask.sum()), preempt_count, migrated
 
 
 def mmpp_arrivals(n: int, lam: float, rng, burst_factor: float = 1.8,

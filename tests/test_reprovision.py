@@ -1,0 +1,419 @@
+"""Live fleet re-provisioning + fault injection (ISSUE 10; DESIGN.md
+§Live re-provisioning & fault injection).
+
+The load-bearing contract extends PR 8's bitwise resume ACROSS ENGINE
+REBUILDS: a request checkpointed by ``FleetRuntime.reprovision`` (or
+salvaged from a killed engine by ``recover_pool``) must finish with
+exactly the tokens an uninterrupted run produces — the swap path
+restores exact KV bits, the recompute path replays exact tokens, and
+both hold across engines because every pool shares one set of params
+and one prefill chunking (masked no-op row independence)."""
+import jax
+import pytest
+
+from conftest import reduced_f32
+from repro.models import model as M
+from repro.serving.config import ServingConfig
+from repro.serving.engine import EngineDead
+from repro.serving.pools import (FleetRuntime, GatewayRequest,
+                                 TwoPoolRuntime)
+from repro.serving.reconfigure import (FaultInjector, HealthPolicy,
+                                       PoolDownError, recover_pool)
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced_f32("llama3-70b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _fleet1(cfg, params, **skw):
+    """Single-pool runtime (the reprovision matrix target: no pool
+    above, so nothing can silently re-route)."""
+    kw = dict(c_chunk=16)
+    kw.update(skw)
+    return FleetRuntime(cfg, params, boundaries=(), gammas=(),
+                        n_maxes=(3,), c_maxes=(128,),
+                        config=ServingConfig(**kw))
+
+
+def _fleet2(cfg, params, **skw):
+    kw = dict(c_chunk=16)
+    kw.update(skw)
+    return TwoPoolRuntime(cfg, params, 64, 1.0, 3, 2, 192,
+                          config=ServingConfig(**kw))
+
+
+def _requests(n=5, max_new=10):
+    """Deterministic mixed-length gateway requests (no eos configured,
+    so service lengths are fixed and every run is bitwise repeatable)."""
+    return [GatewayRequest(i, f"req {i} " + "alpha beta " * (2 + 3 * i),
+                           max_new - (i % 3)) for i in range(n)]
+
+
+def _drive(rt, max_rounds=20_000, on_dead=None, health=None,
+           recoveries=None):
+    """Round-robin step every busy engine until the fleet drains.
+    ``on_dead`` handles EngineDead; ``health`` (a HealthPolicy) feeds
+    wedged pools through the same recovery."""
+    rounds = 0
+    while any(e.busy() for e in rt.engines.values()):
+        for name in list(rt.engines):
+            eng = rt.engines[name]
+            if not eng.busy():
+                continue
+            try:
+                eng.step()
+            except EngineDead:
+                assert on_dead is not None, "unexpected engine death"
+                on_dead(name)
+        if health is not None:
+            for name in health.check(rt):
+                recoveries.append(recover_pool(rt, name))
+        rounds += 1
+        assert rounds < max_rounds, "fleet did not drain"
+    return rounds
+
+
+def _warm(rt, k):
+    for _ in range(k):
+        for eng in list(rt.engines.values()):
+            if eng.busy():
+                eng.step()
+
+
+def _tokens(res):
+    return {rid: r.output_tokens for rid, r in sorted(res.items())}
+
+
+# ===========================================================================
+# bitwise parity across a mid-flight rebuild (the tentpole matrix)
+# ===========================================================================
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("decode_k", [1, 4])
+@pytest.mark.parametrize("paged", [False, True])
+def test_reprovision_parity(engine_model, paged, decode_k, impl):
+    """reprovision() on a loaded pool — fewer slots AND a larger
+    context (the dense path pads host KV rows along seq, the paged path
+    moves blocks unchanged) — completes with zero dropped requests and
+    tokens bitwise identical to an uninterrupted run."""
+    cfg, params = engine_model
+    skw = dict(paged=paged, decode_k=decode_k, decode_impl=impl)
+    if paged:
+        skw["block_size"] = 16
+    reqs = _requests()
+
+    rt = _fleet1(cfg, params, **skw)
+    for r in reqs:
+        rt.submit(r)
+    _drive(rt)
+    base = _tokens(rt.run(max_iters=1))
+    assert len(base) == len(reqs)
+
+    rt = _fleet1(cfg, params, **skw)
+    for r in reqs:
+        rt.submit(r)
+    _warm(rt, 4)
+    pool = next(iter(rt.engines))
+    assert rt.engines[pool].busy(), "nothing in flight at reprovision"
+    info = rt.reprovision(pool, n_max=2, c_max=160)
+    assert info["migrated"] > 0 and info["rerouted"] == 0
+    assert rt.engines[pool].n_max == 2
+    assert rt.engines[pool].c_max == 160
+    _drive(rt)
+    res = rt.run(max_iters=1)
+    assert not any(r.timed_out or r.shed for r in res.values())
+    assert _tokens(res) == base, \
+        "rebuild/migrate changed output tokens"
+    assert rt.reprovision_stats["rebuilds"] == 1
+    assert rt.reprovision_stats["migrated_requests"] == info["migrated"]
+
+
+def test_reprovision_top_pool_shrink_refused(engine_model):
+    """Shrinking the top pool below an in-flight request's footprint
+    must be refused BEFORE any state is touched (no pool above to
+    re-route the misfits to)."""
+    cfg, params = engine_model
+    rt = _fleet1(cfg, params)
+    rt.submit(GatewayRequest(0, "long " * 30, 12))
+    _warm(rt, 2)
+    eng = rt.engines["long"]          # K=1 pool is named "long"
+    with pytest.raises(ValueError, match="orphan"):
+        rt.reprovision("long", c_max=16)
+    assert rt.engines["long"] is eng          # nothing was swapped
+    _drive(rt)
+    assert len(rt.run(max_iters=1)) == 1
+
+
+class _TinyLout:
+    """Stub predictor that always guesses a 4-token output — the way a
+    short-pool request ends up with prompt + budget past the routing
+    boundary (lout_routing routes on the PREDICTION, the engine keeps
+    the full declared budget)."""
+    def predict(self, prompt_tokens, category=None, cap=None):
+        return 4
+
+    def update(self, l_in, l_out, category=None):
+        pass
+
+
+def _headroom_fleet(cfg, params):
+    """K=2 fleet whose short pool has context headroom past its routing
+    boundary (TwoPoolRuntime pins c_max_short == b_short, which leaves
+    nothing to shrink)."""
+    return FleetRuntime(cfg, params, boundaries=(32,), gammas=(1.0,),
+                        n_maxes=(3, 2), c_maxes=(64, 192),
+                        config=ServingConfig(c_chunk=16,
+                                             lout_routing=True),
+                        lout_predictor=_TinyLout())
+
+
+def _short_reqs():
+    # 4 bytes/token: prompts of 20..26 tokens; the stub predictor makes
+    # every request route short (estimate <= 32-token boundary), while
+    # prompt + declared budget spans 32..50 — straddling the
+    # post-shrink context of 36
+    return [GatewayRequest(i, "a" * (80 + 8 * (i % 4)), 12 + (i % 3) * 6)
+            for i in range(5)]
+
+
+def test_reprovision_misfits_reroute_one_pool_up(engine_model):
+    """Shrinking a NON-top pool re-routes requests the new geometry
+    cannot hold to the pool above (whose context is larger by
+    construction) — zero-drop, and the recorded routing decision
+    follows so the gateway response names the serving pool."""
+    cfg, params = engine_model
+    reqs = _short_reqs()
+    rt = _headroom_fleet(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _drive(rt)
+    base = _tokens(rt.run(max_iters=1))
+
+    rt = _headroom_fleet(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _warm(rt, 3)
+    info = rt.reprovision("short", c_max=36)
+    assert info["rerouted"] > 0, "no request exceeded the shrunk context"
+    _drive(rt)
+    res = rt.run(max_iters=1)
+    assert _tokens(res) == base
+    rerouted = [r for r in res.values() if r.pool == "long"]
+    assert len(rerouted) == info["rerouted"]
+    assert rt.reprovision_stats["rerouted_requests"] == info["rerouted"]
+
+
+# ===========================================================================
+# fault injection: kill / allocator exhaustion / wedge
+# ===========================================================================
+def test_killed_engine_loses_no_accepted_request(engine_model):
+    """An injected crash loses device state but no accepted request:
+    recovery salvages slots + queue from host mirrors, re-routes one
+    pool up, and the tokens still match the unfaulted run bitwise."""
+    cfg, params = engine_model
+    reqs = _requests()
+    rt = _fleet2(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _drive(rt)
+    base = _tokens(rt.run(max_iters=1))
+
+    rt = _fleet2(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _warm(rt, 3)
+    assert rt.engines["short"].busy()
+    FaultInjector(rt).kill("short")
+    recoveries = []
+    _drive(rt, on_dead=lambda p: recoveries.append(
+        recover_pool(rt, p, blackout_s=0.0)))
+    assert len(recoveries) == 1
+    assert recoveries[0]["rerouted_to"] == "long"
+    res = rt.run(max_iters=1)
+    assert _tokens(res) == base, "crash recovery changed output tokens"
+    migrated = [r for r in res.values() if r.pool == "long"]
+    assert len(migrated) >= recoveries[0]["migrated"]
+    assert rt.reprovision_stats["engine_restarts"] == 1
+
+
+def test_allocator_exhaustion_fault_recovery(engine_model):
+    """The oom fault raises from INSIDE _alloc_block, leaving the paged
+    counters inconsistent on purpose — salvage must still recover every
+    accepted request because it reads host mirrors only."""
+    cfg, params = engine_model
+    reqs = _requests(max_new=16)
+    skw = dict(paged=True, block_size=8)
+    rt = _fleet2(cfg, params, **skw)
+    for r in reqs:
+        rt.submit(r)
+    _drive(rt)
+    base = _tokens(rt.run(max_iters=1))
+
+    rt = _fleet2(cfg, params, **skw)
+    for r in reqs:
+        rt.submit(r)
+    _warm(rt, 2)
+    FaultInjector(rt).exhaust_allocator("short")
+    recoveries = []
+    _drive(rt, on_dead=lambda p: recoveries.append(
+        recover_pool(rt, p, blackout_s=0.0)))
+    assert len(recoveries) == 1, \
+        "allocator fault never fired (no block crossing?)"
+    res = rt.run(max_iters=1)
+    assert _tokens(res) == base
+
+
+def test_wedged_engine_detected_and_recovered(engine_model):
+    """The wedge fault makes step() return without advancing the
+    iteration clock — no raise, so only the HealthPolicy's stall
+    detector can catch it. Recovery is then identical to a crash."""
+    cfg, params = engine_model
+    reqs = _requests()
+    rt = _fleet2(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _drive(rt)
+    base = _tokens(rt.run(max_iters=1))
+
+    rt = _fleet2(cfg, params)
+    for r in reqs:
+        rt.submit(r)
+    _warm(rt, 3)
+    FaultInjector(rt).wedge("short")
+    recoveries = []
+    _drive(rt, health=HealthPolicy(patience=2), recoveries=recoveries)
+    assert len(recoveries) == 1
+    res = rt.run(max_iters=1)
+    assert _tokens(res) == base
+    assert rt.reprovision_stats["engine_restarts"] == 1
+
+
+def test_blackout_refuses_then_recovers(engine_model):
+    """During the post-crash blackout the pool refuses NEW submissions
+    with PoolDownError (503 + Retry-After at the gateway); other pools
+    keep serving, and the pool re-opens once the window elapses."""
+    cfg, params = engine_model
+    rt = _fleet2(cfg, params)
+    recover_pool(rt, "short", blackout_s=60.0)
+    with pytest.raises(PoolDownError) as ei:
+        rt.submit(GatewayRequest(0, "tiny", 4))
+    assert ei.value.pool == "short" and ei.value.retry_after > 0
+    # the long pool is unaffected (prompt past the 64-token boundary)
+    rt.submit(GatewayRequest(1, "big " * 80, 4))
+    # window elapsed: the pool serves again
+    rt.pool_down_until["short"] = 0.0
+    rt.submit(GatewayRequest(2, "tiny", 4))
+    res = rt.run()
+    assert set(res) == {1, 2}
+
+
+# ===========================================================================
+# satellites: timed-out surfacing + flat host dicts
+# ===========================================================================
+def test_run_surfaces_timed_out_requests(engine_model):
+    """run(max_iters) used to silently drop requests still in flight at
+    the cap; they now come back as timed_out=True responses carrying
+    the partial token prefix, stay live on the engine, and a later
+    run() finishes them (the partial is a prefix of the final)."""
+    cfg, params = engine_model
+    rt = _fleet1(cfg, params)
+    rt.submit(GatewayRequest(0, "steady stream of words here", 24))
+    partial = rt.run(max_iters=5)
+    assert set(partial) == {0} and partial[0].timed_out
+    assert 0 < len(partial[0].output_tokens) < 24
+    full = rt.run()
+    assert not full[0].timed_out
+    assert len(full[0].output_tokens) == 24
+    assert full[0].output_tokens[:len(partial[0].output_tokens)] \
+        == partial[0].output_tokens
+
+
+def test_host_dicts_stay_flat_across_waves(engine_model):
+    """Three full request waves through FleetRuntime.run: the
+    per-request host dicts (engine results, gateway decisions /
+    categories) must be EMPTY after each wave — the long-running
+    serving process leaks nothing per request served."""
+    cfg, params = engine_model
+    rt = _fleet2(cfg, params)
+    rid = 0
+    for _ in range(3):
+        for _ in range(4):
+            rt.submit(GatewayRequest(rid, "wave " * (1 + rid % 5), 6))
+            rid += 1
+        res = rt.run()
+        assert len(res) == 4
+        assert not rt._decisions and not rt._categories
+        assert all(not e.results for e in rt.engines.values())
+
+
+# ===========================================================================
+# sharded migration (CI multi-device job runs `-k sharded`)
+# ===========================================================================
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs >= 8 devices (set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _sharded_fleet(cfg, params, mesh, tp):
+    return FleetRuntime(cfg, params, boundaries=(), gammas=(),
+                        n_maxes=(2,), c_maxes=(128,),
+                        config=ServingConfig(
+                            c_chunk=16, paged=True, block_size=16,
+                            prefix_cache=True, mesh=mesh, tp_degree=tp))
+
+
+def _session_reqs():
+    """Mixed stream whose last request is turn 2 of a session — its
+    prompt prefix is WARM in the pool's prefix cache when the rebuild
+    hits, so the checkpoint path must coexist with ref-counted shared
+    blocks."""
+    turn1 = "session history " * 8
+    return ([GatewayRequest(0, turn1, 6, session="s")],
+            [GatewayRequest(1, "other stream " * 4, 8),
+             GatewayRequest(2, turn1 + "follow-up turn", 8, session="s")])
+
+
+def _run_sharded(cfg, params, mesh, tp, reprovision_tp=None):
+    rt = _sharded_fleet(cfg, params, mesh, tp)
+    wave1, wave2 = _session_reqs()
+    out = {}
+    for r in wave1:
+        rt.submit(r)
+    out.update(_tokens(rt.run()))
+    for r in wave2:
+        rt.submit(r)
+    _warm(rt, 3)
+    bytes_before = rt.engines["long"].cache_bytes_per_device()
+    if reprovision_tp is not None:
+        assert rt.engines["long"].busy()
+        info = rt.reprovision("long", tp=reprovision_tp)
+        assert info["migrated"] > 0
+    bytes_after = rt.engines["long"].cache_bytes_per_device()
+    _drive(rt)
+    out.update(_tokens(rt.run(max_iters=1)))
+    return rt, out, bytes_before, bytes_after
+
+
+@multi_device
+@pytest.mark.parametrize("new_tp", [2, 1])
+def test_sharded_reprovision_migrates_submesh(engine_model, new_tp):
+    """Reprovision a tp=4 pool onto a different submesh (tp=2: half the
+    devices) and down to tp=1 mid-flight, with a prefix-cache-warm
+    session turn in the stream: tokens stay bitwise the uninterrupted
+    tp=4 run's, and per-device KV bytes scale exactly 4/new_tp after
+    the swap (same block pool over fewer shards)."""
+    from repro.launch.mesh import make_smoke_mesh
+    cfg, params = engine_model
+    mesh = make_smoke_mesh()
+    _, base, _, _ = _run_sharded(cfg, params, mesh, tp=4)
+    rt, got, b4, after = _run_sharded(cfg, params, mesh, tp=4,
+                                      reprovision_tp=new_tp)
+    assert got == base, f"tp=4 -> tp={new_tp} migration diverged"
+    eng = rt.engines["long"]
+    assert eng.tp_degree == new_tp
+    assert len(eng.devices()) == new_tp
+    # identical logical cache over 1/tp devices: exact HBM scaling
+    assert after == b4 * 4 // new_tp, (b4, after)
+    assert rt.reprovision_stats["rebuilds"] == 1

@@ -142,6 +142,7 @@ _ENGINE_ATTR = {
     "parallel": None,
     "tp_degree": None,
     "lout_routing": None,
+    "autoscale": None,
 }
 
 
@@ -159,7 +160,8 @@ def test_every_field_reaches_engines(cfg, params):
         c_chunk=24, eos_id=7, decode_k=2, spec_k=2, spec_ngram=2,
         paged=True, block_size=8, num_blocks=96, prefix_cache=True,
         preemption=True, max_queue_wait=50.0, swap_threshold=3,
-        hol_window=4, lout_reservation=True, lout_routing=True)
+        hol_window=4, lout_reservation=True, lout_routing=True,
+        autoscale=True)
     defaults = ServingConfig()
     non_default = {f for f in fields
                    if getattr(scfg, f) != getattr(defaults, f)}
@@ -177,6 +179,7 @@ def test_every_field_reaches_engines(cfg, params):
     assert rt.tp_degree == scfg.tp_degree
     assert rt.router.lout_predictor is rt.lout_predictor is not None
     assert rt.config == scfg
+    assert rt.config.autoscale    # the replanner's _autoscale gate
 
 
 def test_fleet_runtime_forwards_hol_window(cfg, params):
